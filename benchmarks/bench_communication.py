@@ -1,0 +1,36 @@
+"""Fig. 2: communication volume per training round (OFL vs OAFL vs
+FedOptima).  A round = training over the full distributed dataset."""
+from __future__ import annotations
+
+from repro.core.baselines import simulate_oafl, simulate_splitfed
+from repro.core.simulation import simulate_fedoptima
+
+from .common import MOBILENET_SPLIT, Row, testbed_b, timed
+
+DUR = 600.0
+TOTAL = 16 * 6250      # nominal Tiny ImageNet split across 16 devices
+
+
+def main() -> list[Row]:
+    cluster = testbed_b()
+    rows = []
+    ofl, us1 = timed(simulate_splitfed, MOBILENET_SPLIT, cluster, duration=DUR)
+    oafl, us2 = timed(simulate_oafl, MOBILENET_SPLIT, cluster, duration=DUR)
+    fo, us3 = timed(simulate_fedoptima, MOBILENET_SPLIT, cluster,
+                    duration=DUR, omega=8)
+    c_ofl = ofl.comm_per_round(TOTAL)
+    c_oafl = oafl.comm_per_round(TOTAL)
+    c_fo = fo.comm_per_round(TOTAL)
+    rows.append(Row("comm/ofl(splitfed)", us1, f"MB_per_round={c_ofl/1e6:.1f}"))
+    rows.append(Row("comm/oafl", us2, f"MB_per_round={c_oafl/1e6:.1f}"))
+    rows.append(Row("comm/fedoptima", us3, f"MB_per_round={c_fo/1e6:.1f}"))
+    rows.append(Row("comm/oafl_increase_over_ofl", 0.0,
+                    f"pct={(c_oafl/c_ofl - 1):.1%}"))
+    rows.append(Row("comm/fedoptima_reduction_vs_oafl", 0.0,
+                    f"pct={(1 - c_fo/c_oafl):.1%}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(r.csv())

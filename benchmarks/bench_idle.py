@@ -1,0 +1,43 @@
+"""Fig. 8/9: server + device idle time per method, both testbeds."""
+from __future__ import annotations
+
+from repro.core.baselines import REGISTRY
+from repro.core.simulation import simulate_fedoptima
+
+from .common import (MOBILENET_SPLIT, Row, TRANSFORMER6_SPLIT, VGG5_SPLIT,
+                     testbed_a, testbed_b, timed)
+
+DUR = 600.0
+
+
+def run(model, cluster, tag):
+    rows = []
+    m, us = timed(simulate_fedoptima, model, cluster, duration=DUR, omega=8)
+    rows.append(Row(f"idle/{tag}/fedoptima", us,
+                    f"srv_idle={m.srv_idle_frac:.3f};dev_idle={m.dev_idle_frac:.3f}"))
+    best_srv, best_dev = m.srv_idle_frac, m.dev_idle_frac
+    base_srv, base_dev = [], []
+    for name, fn in REGISTRY.items():
+        b, us = timed(fn, model, cluster, duration=DUR)
+        rows.append(Row(f"idle/{tag}/{name}", us,
+                        f"srv_idle={b.srv_idle_frac:.3f};dev_idle={b.dev_idle_frac:.3f}"))
+        base_srv.append(b.srv_idle_frac)
+        base_dev.append(b.dev_idle_frac)
+    red_srv = 1.0 - best_srv / max(min(base_srv), 1e-9)
+    red_dev = 1.0 - best_dev / max(min(base_dev), 1e-9)
+    rows.append(Row(f"idle/{tag}/reduction_vs_best_baseline", 0.0,
+                    f"server={red_srv:.1%};device={red_dev:.1%}"))
+    return rows
+
+
+def main() -> list[Row]:
+    rows = []
+    rows += run(VGG5_SPLIT, testbed_a(), "A_vgg5")
+    rows += run(MOBILENET_SPLIT, testbed_b(), "B_mobilenet")
+    rows += run(TRANSFORMER6_SPLIT, testbed_a(), "A_transformer6")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(r.csv())

@@ -1,0 +1,46 @@
+"""Fig. 3 / Eq. 2-3: server memory vs number of devices.
+
+OAFL: μ = (K+1)·μ_model + K·μ_act (a server-side model per device).
+FedOptima: μ = μ_model + ω·μ_act (one model + a global activation cap) —
+verified against the simulator's actual peak buffer occupancy."""
+from __future__ import annotations
+
+from repro.core.simulation import simulate_fedoptima
+
+from .common import MOBILENET_SPLIT, Row, testbed_b, timed
+from repro.core.simulation import SimCluster
+import numpy as np
+
+MU_MODEL = 22e6       # server-side MobileNetV3 block bytes
+MU_ACT = 3.2e6        # one activation batch
+OMEGA = 8
+
+
+def main() -> list[Row]:
+    rows = []
+    for K in (8, 16, 32, 64, 128, 256):
+        oafl = (K + 1) * MU_MODEL + K * MU_ACT
+        fed = MU_MODEL + OMEGA * MU_ACT
+        rows.append(Row(f"memory/K={K}/oafl_eq2", 0.0,
+                        f"GB={oafl/1e9:.3f}"))
+        rows.append(Row(f"memory/K={K}/fedoptima_eq3", 0.0,
+                        f"GB={fed/1e9:.3f}"))
+    # verify the cap empirically: peak buffered activations ≤ ω for any K
+    for K in (8, 32, 128):
+        cluster = SimCluster(dev_flops=np.full(K, 5e9),
+                             dev_bw=np.full(K, 100e6 / 8), srv_flops=4e11)
+        m, us = timed(simulate_fedoptima, MOBILENET_SPLIT, cluster,
+                      duration=120.0, omega=OMEGA)
+        rows.append(Row(f"memory/K={K}/sim_peak_buffer", us,
+                        f"max_buffered={m.max_buffered};omega={OMEGA}"))
+        assert m.max_buffered <= OMEGA
+    # 8 GB server bound (paper: OAFL caps out at 26 devices)
+    k_max_oafl = int((8e9 - MU_MODEL) / (MU_MODEL + MU_ACT))
+    rows.append(Row("memory/oafl_max_devices_8GB", 0.0, f"K={k_max_oafl}"))
+    rows.append(Row("memory/fedoptima_max_devices_8GB", 0.0, "K=unbounded"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(r.csv())

@@ -1,0 +1,37 @@
+"""Eq. 6-8: split-point selection cost curves for the paper models and the
+assigned LM architectures under the two testbed profiles."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs import registry
+from repro.core.partition import (cnn_profile, select_split, split_costs,
+                                  transformer_profile)
+from repro.models.cnn import mobilenetv3ish_config, vgg5_config
+
+from .common import Row, testbed_a, testbed_b, timed
+
+
+def main() -> list[Row]:
+    rows = []
+    for tag, prof, cluster in (
+            ("vgg5/A", cnn_profile(vgg5_config()), testbed_a()),
+            ("mobilenet/B", cnn_profile(mobilenetv3ish_config()), testbed_b())):
+        l, us = timed(select_split, prof, cluster.dev_flops, cluster.dev_bw)
+        c = split_costs(prof, cluster.dev_flops, cluster.dev_bw)
+        rows.append(Row(f"partition/{tag}", us,
+                        f"l_star={l};cost_s={c[l-1]:.4f};units={prof.n_units}"))
+    for name in ("smollm-135m", "qwen3-32b", "jamba-1.5-large-398b",
+                 "qwen3-moe-235b-a22b"):
+        cfg = registry.get(name)
+        prof = transformer_profile(cfg, seq=4096)
+        cluster = testbed_b()
+        l, us = timed(select_split, prof, cluster.dev_flops, cluster.dev_bw)
+        rows.append(Row(f"partition/{name}/B", us,
+                        f"l_star={l};periods={prof.n_units}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(r.csv())

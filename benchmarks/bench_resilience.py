@@ -1,0 +1,48 @@
+"""Fig. 12/13: throughput retention R(p) = T(p)/T(0) under churn +
+bandwidth variation (§6.4 protocol: re-draw every 10 sim-minutes)."""
+from __future__ import annotations
+
+from repro.core.baselines import simulate_fedasync, simulate_pipar
+from repro.core.simulation import simulate_fedoptima
+from repro.runtime.fault_tolerance import ChurnModel
+
+from .common import (MOBILENET_SPLIT, Row, TRANSFORMER12_SPLIT, testbed_b,
+                     timed)
+
+DUR = 3600.0
+PS = (0.0, 0.1, 0.3, 0.5)
+
+
+def retention(sim_fn, model, cluster, tag):
+    rows = []
+    base = None
+    for p in PS:
+        churn = (None if p == 0.0 else
+                 ChurnModel(n_devices=cluster.K, p_drop=p, interval=600.0,
+                            bw_lo=50e6 / 8, bw_hi=100e6 / 8, seed=int(p * 10)))
+        m, us = timed(sim_fn, model, cluster, duration=DUR, churn=churn)
+        if p == 0.0:
+            base = m.throughput
+        r = m.throughput / max(base, 1e-9)
+        rows.append(Row(f"resilience/{tag}/p={p}", us,
+                        f"throughput={m.throughput:.1f};R={r:.3f}"))
+    return rows
+
+
+def main() -> list[Row]:
+    cluster = testbed_b()
+    rows = []
+    rows += retention(lambda m, c, **kw: simulate_fedoptima(m, c, omega=8, **kw),
+                      MOBILENET_SPLIT, cluster, "B_image/fedoptima")
+    rows += retention(simulate_fedasync, MOBILENET_SPLIT, cluster,
+                      "B_image/fedasync")
+    rows += retention(lambda m, c, **kw: simulate_fedoptima(m, c, omega=8, **kw),
+                      TRANSFORMER12_SPLIT, cluster, "B_text/fedoptima")
+    rows += retention(simulate_pipar, TRANSFORMER12_SPLIT, cluster,
+                      "B_text/pipar")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(r.csv())

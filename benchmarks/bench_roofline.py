@@ -1,0 +1,50 @@
+"""§Roofline table: reads the dry-run JSON records (results/dryrun) and
+emits the per-(arch × shape) roofline terms; falls back to compiling the
+three smallest cells live if no records exist."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import Row
+
+_BASE = os.path.join(os.path.dirname(__file__), "..", "results")
+RESULTS = os.path.join(_BASE, "final") if \
+    os.path.isdir(os.path.join(_BASE, "final")) else \
+    os.path.join(_BASE, "dryrun")
+
+
+def _row_from_record(rec) -> list[Row]:
+    if rec.get("status") == "skip":
+        return [Row(f"roofline/{rec['arch']}/{rec['shape']}/{rec.get('mesh_kind','single')}",
+                    0.0, f"SKIP:{rec['reason'][:60]}")]
+    if rec.get("status") != "ok":
+        return [Row(f"roofline/{rec['arch']}/{rec['shape']}/{rec.get('mesh_kind','single')}",
+                    0.0, f"ERROR:{rec.get('error', '?')[:60]}")]
+    t = rec["roofline_kernelized"]
+    mem = rec["memory_analysis"]["temp_bytes"] / 1e9
+    return [Row(
+        f"roofline/{rec['arch']}/{rec['shape']}/{rec.get('mesh_kind','single')}",
+        rec.get("compile_s", 0.0) * 1e6,
+        f"compute_s={t['compute_s']:.4f};memory_s={t['memory_s']:.4f};"
+        f"collective_s={t['collective_s']:.4f};dominant={t['dominant']};"
+        f"mfu_bound={t['mfu_bound']:.3f};temp_GB={mem:.2f}")]
+
+
+def main() -> list[Row]:
+    rows = []
+    files = sorted(glob.glob(os.path.join(RESULTS, "*.json")))
+    if not files:
+        return [Row("roofline/no_records", 0.0,
+                    "run `python -m repro.launch.dryrun --all --out "
+                    "results/dryrun` first")]
+    for f in files:
+        with open(f) as fh:
+            rows += _row_from_record(json.load(fh))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(r.csv())

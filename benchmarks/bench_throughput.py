@@ -1,0 +1,41 @@
+"""Fig. 10/11: system throughput (samples/s) per method, both testbeds."""
+from __future__ import annotations
+
+from repro.core.baselines import REGISTRY
+from repro.core.simulation import simulate_fedoptima
+
+from .common import (MOBILENET_SPLIT, Row, TRANSFORMER12_SPLIT,
+                     TRANSFORMER6_SPLIT, VGG5_SPLIT, testbed_a, testbed_b,
+                     timed)
+
+DUR = 600.0
+
+
+def run(model, cluster, tag):
+    rows = []
+    fo, us = timed(simulate_fedoptima, model, cluster, duration=DUR, omega=8)
+    rows.append(Row(f"throughput/{tag}/fedoptima", us,
+                    f"samples_per_s={fo.throughput:.1f}"))
+    best = 0.0
+    for name, fn in REGISTRY.items():
+        b, us = timed(fn, model, cluster, duration=DUR)
+        rows.append(Row(f"throughput/{tag}/{name}", us,
+                        f"samples_per_s={b.throughput:.1f}"))
+        best = max(best, b.throughput)
+    rows.append(Row(f"throughput/{tag}/speedup_vs_best_baseline", 0.0,
+                    f"x={fo.throughput / max(best, 1e-9):.2f}"))
+    return rows
+
+
+def main() -> list[Row]:
+    rows = []
+    rows += run(VGG5_SPLIT, testbed_a(), "A_vgg5")
+    rows += run(MOBILENET_SPLIT, testbed_b(), "B_mobilenet")
+    rows += run(TRANSFORMER6_SPLIT, testbed_a(), "A_transformer6")
+    rows += run(TRANSFORMER12_SPLIT, testbed_b(), "B_transformer12")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(r.csv())

@@ -1,0 +1,67 @@
+"""Shared benchmark harness: the paper's testbeds as simulator configs.
+
+Testbed A: 8 devices (Raspberry Pi classes, 4 speed groups), CPU server,
+50 Mbps links.  Testbed B: 16 devices (Jetson classes), GPU server,
+100 Mbps links.  Speed ratios follow Table 3; absolute scales are nominal
+(the figures reproduce *relative* orderings — see DESIGN.md §7)."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+from repro.core.simulation import SimModel, SimCluster, heterogeneous_cluster
+
+# device-side / server-side per-batch costs for a VGG-5-like split (batch 32)
+VGG5_SPLIT = SimModel(
+    dev_fwd_flops=1.2e9, dev_bwd_flops=2.4e9, full_fwd_flops=7.5e9,
+    srv_flops_per_batch=1.9e10, act_bytes=2.1e6, dev_model_bytes=0.5e6,
+    full_model_bytes=8e6, batch_size=32)
+
+# MobileNetV3-Large-ish on Tiny ImageNet (batch 32)
+MOBILENET_SPLIT = SimModel(
+    dev_fwd_flops=2.5e9, dev_bwd_flops=5.0e9, full_fwd_flops=1.4e10,
+    srv_flops_per_batch=2.6e10, act_bytes=3.2e6, dev_model_bytes=1.2e6,
+    full_model_bytes=2.2e7, batch_size=32)
+
+# Transformer-6 on SST-2 (batch 32, seq 64)
+TRANSFORMER6_SPLIT = SimModel(
+    dev_fwd_flops=0.8e9, dev_bwd_flops=1.6e9, full_fwd_flops=4.6e9,
+    srv_flops_per_batch=1.2e10, act_bytes=0.82e6, dev_model_bytes=0.7e6,
+    full_model_bytes=4.5e6, batch_size=32)
+
+# Transformer-12 on IMDB (batch 32, seq 128)
+TRANSFORMER12_SPLIT = SimModel(
+    dev_fwd_flops=1.6e9, dev_bwd_flops=3.2e9, full_fwd_flops=1.05e10,
+    srv_flops_per_batch=2.6e10, act_bytes=1.64e6, dev_model_bytes=0.8e6,
+    full_model_bytes=9e6, batch_size=32)
+
+
+def testbed_a() -> SimCluster:
+    return heterogeneous_cluster(8, base_flops=3e9,
+                                 speed_groups=(1.0, 2.0, 2.0, 3.0),
+                                 bw=50e6 / 8, srv_ratio=20.0)
+
+
+def testbed_b() -> SimCluster:
+    return heterogeneous_cluster(16, base_flops=8e9,
+                                 speed_groups=(1.0, 1.33, 2.67, 3.84),
+                                 bw=100e6 / 8, srv_ratio=50.0)
+
+
+@dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: str
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.1f},{self.derived}"
+
+
+def timed(fn, *args, repeat: int = 1, **kw):
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeat
+    return out, dt * 1e6

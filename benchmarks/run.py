@@ -1,0 +1,40 @@
+"""Benchmark harness: one module per paper table/figure + the roofline
+table.  Prints ``name,us_per_call,derived`` CSV.
+
+    PYTHONPATH=src python -m benchmarks.run              # all
+    PYTHONPATH=src python -m benchmarks.run idle comm    # subset
+"""
+from __future__ import annotations
+
+import sys
+
+from . import (bench_ablation_aux, bench_ablation_sched, bench_accuracy,
+               bench_communication, bench_idle, bench_memory,
+               bench_partition, bench_resilience, bench_roofline,
+               bench_throughput)
+
+SUITES = {
+    "communication": bench_communication,   # Fig. 2
+    "memory": bench_memory,                 # Fig. 3 / Eq. 2-3
+    "accuracy": bench_accuracy,             # Table 2, Fig. 6/7
+    "idle": bench_idle,                     # Fig. 8/9
+    "throughput": bench_throughput,         # Fig. 10/11
+    "resilience": bench_resilience,         # Fig. 12/13
+    "ablation_aux": bench_ablation_aux,     # Fig. 14
+    "ablation_sched": bench_ablation_sched, # Fig. 15
+    "partition": bench_partition,           # Eq. 6-8
+    "roofline": bench_roofline,             # §Roofline (deliverable g)
+}
+
+
+def main() -> None:
+    which = sys.argv[1:] or list(SUITES)
+    print("name,us_per_call,derived")
+    for name in which:
+        mod = SUITES[name]
+        for row in mod.main():
+            print(row.csv(), flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""End-to-end driver: train the ~135M-param smollm architecture (reduced
+depth for CPU wall-clock, full d_model/vocab optional) with FedOptima for
+a few hundred rounds on non-IID synthetic LM shards, with checkpointing.
+
+This is the (b) deliverable's "train a ~100M model for a few hundred
+steps" driver: on a TPU pod you'd pass --full and a real mesh; on CPU the
+same code path runs the smoke reduction by default.
+
+Run:  PYTHONPATH=src python examples/federated_lm.py [--rounds 200] [--full]
+"""
+import argparse
+
+from repro.launch.train import run_pod
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--rounds", type=int, default=200)
+    p.add_argument("--full", action="store_true",
+                   help="full smollm-135m config (slow on CPU)")
+    p.add_argument("--ckpt-dir", default="/tmp/fedoptima_lm_ckpt")
+    args = p.parse_args()
+
+    ns = argparse.Namespace(
+        arch="smollm-135m", full=args.full, rounds=args.rounds,
+        seq_len=128 if not args.full else 1024, batch=8, H=4, l_split=0,
+        lr_d=0.08, lr_s=0.08, server_opt="adamw", mesh_data=1, mesh_model=1,
+        groups_per_shard=4, p_drop=0.05,         # light churn, §3.4.2
+        ckpt_dir=args.ckpt_dir, ckpt_every=25, log_every=10, seed=0)
+    out = run_pod(ns)
+    h = out["history"]
+    print(f"\ntrained {len(h)} rounds; server loss "
+          f"{h[0]['s_loss']:.3f} -> {h[-1]['s_loss']:.3f}, device aux loss "
+          f"{h[0]['d_loss']:.3f} -> {h[-1]['d_loss']:.3f}")
+    assert h[-1]["s_loss"] < h[0]["s_loss"], "server did not learn"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Quickstart: the FedOptima pipeline in ~60 lines.
+
+1. Pick an architecture (any of the 10 assigned ids) at smoke scale.
+2. Split it at a period boundary (paper Eq. 8 picks the split from device
+   profiles; here we take the default).
+3. Run a few hybrid rounds: device groups train their block with the
+   auxiliary-network local loss; the server trains the rest centrally on
+   the activation stream; async aggregation merges device blocks.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry
+from repro.core import fedopt_step as F
+from repro.launch.mesh import make_debug_mesh
+
+ARCH = "smollm-135m"
+
+arch = registry.smoke_config(ARCH)
+mesh = make_debug_mesh(1, 1)                   # CPU: a 1x1 debug mesh
+cfg = F.FedStepConfig(
+    arch=arch,
+    l_split=F.default_l_split(arch),           # device-side periods
+    n_groups=4,                                # FL device groups
+    seq_len=64, per_group_batch=4, H=4,        # 4 local iters per round
+    lr_d=0.1, lr_s=0.1)
+
+step, _, state_shardings, _ = F.jit_train_step(cfg, mesh)
+state = jax.jit(lambda: F.init_train_state(jax.random.PRNGKey(0), cfg),
+                out_shardings=state_shardings)()
+
+print(f"{ARCH}: {arch.n_periods} periods, split at {cfg.l_split} "
+      f"(device) / {arch.n_periods - cfg.l_split} (server), "
+      f"{cfg.n_groups} groups x H={cfg.H}")
+
+for r in range(8):
+    batch = F.concrete_train_batch(jax.random.PRNGKey(100 + r), cfg)
+    state, metrics = step(state, batch)
+    print(f"round {r+1}: device aux loss {float(metrics['d_loss']):.4f}  "
+          f"server loss {float(metrics['s_loss']):.4f}  "
+          f"global version {int(state['version'])}")
+
+print("done — devices never waited for the server (activation buffer is "
+      "one step stale), and no gradient ever crossed server->device.")

@@ -1,0 +1,3 @@
+from .hlo import Cost, HloModule, analyze_compiled, analyze_text
+from .roofline import (RooflineTerms, count_params, model_flops, roofline,
+                       PEAK_FLOPS, HBM_BW, LINK_BW)

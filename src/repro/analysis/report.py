@@ -1,0 +1,105 @@
+"""Assemble the EXPERIMENTS.md §Dry-run / §Roofline tables from the
+dry-run JSON records."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load_records(results_dir: str, mesh_kind: str | None = None) -> list[dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(f) as fh:
+            r = json.load(fh)
+        if mesh_kind and r.get("mesh_kind") != mesh_kind:
+            continue
+        recs.append(r)
+    return recs
+
+
+def _fmt_bytes(n: float) -> str:
+    return f"{n / 1e9:.2f}"
+
+
+def roofline_table(recs: list[dict], which: str = "roofline_kernelized") -> str:
+    """Markdown table: per-cell terms, dominant bottleneck, MFU bound."""
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "useful ratio | MFU bound | temp GB/chip |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    recs = sorted(recs, key=lambda r: (r["arch"], order.get(r["shape"], 9)))
+    for r in recs:
+        if r.get("status") == "skip":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"skipped | — | — | — |")
+            continue
+        if r.get("status") != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | ERROR "
+                         f"{r.get('error', '')[:40]} | | | | | | |")
+            continue
+        t = r[which]
+        mem = r["memory_analysis"]["temp_bytes"] / 1e9
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.4f} | "
+            f"{t['memory_s']:.4f} | {t['collective_s']:.4f} | "
+            f"{t['dominant']} | {t['useful_ratio']:.3f} | "
+            f"{t['mfu_bound']:.3f} | {mem:.2f} |")
+    return "\n".join(lines)
+
+
+def dryrun_table(recs: list[dict]) -> str:
+    lines = [
+        "| arch | shape | mesh | status | compile s | args GB | temp GB | "
+        "HLO GFLOPs/chip | coll GB/chip |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    recs = sorted(recs, key=lambda r: (r["arch"], order.get(r["shape"], 9),
+                                       r.get("mesh_kind", "")))
+    for r in recs:
+        mesh = r.get("mesh_kind", "?")
+        if r.get("status") == "skip":
+            lines.append(f"| {r['arch']} | {r['shape']} | {mesh} | SKIP | — "
+                         f"| — | — | — | — |")
+            continue
+        if r.get("status") != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | {mesh} | ERROR | "
+                         f"| | | | |")
+            continue
+        m = r["memory_analysis"]
+        t = r["roofline"]
+        coll = sum(t["collective_bytes"].values()) / 1e9
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {mesh} | ok | "
+            f"{r.get('compile_s', 0):.0f} | {m['argument_bytes']/1e9:.2f} | "
+            f"{m['temp_bytes']/1e9:.2f} | {t['flops']/1e9:.0f} | "
+            f"{coll:.2f} |")
+    return "\n".join(lines)
+
+
+def pick_hillclimb_cells(recs: list[dict]) -> dict:
+    """worst roofline fraction / most collective-bound / most
+    representative-of-the-technique (train_4k on a big dense arch)."""
+    ok = [r for r in recs if r.get("status") == "ok"]
+    worst = min(ok, key=lambda r: r["roofline_kernelized"]["mfu_bound"])
+    coll = max(ok, key=lambda r: (r["roofline_kernelized"]["collective_s"] /
+                                  max(r["roofline_kernelized"]["step_s"],
+                                      1e-12)))
+    rep = next(r for r in ok
+               if r["arch"] == "command-r-plus-104b" and
+               r["shape"] == "train_4k")
+    return {"worst_mfu": worst, "most_collective": coll,
+            "representative": rep}
+
+
+if __name__ == "__main__":
+    import sys
+    d = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
+    recs = load_records(d, "single")
+    print("## Dry-run (single-pod)\n")
+    print(dryrun_table(recs))
+    print("\n## Roofline (kernelized)\n")
+    print(roofline_table(recs))

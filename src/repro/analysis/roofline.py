@@ -1,0 +1,156 @@
+"""Roofline model for TPU v5e meshes.
+
+Three terms per (arch × shape × mesh), all in seconds *per step per chip*
+(the HLO parsed is the per-device SPMD program, so parsed quantities are
+already per-chip):
+
+  compute_s    = HLO_FLOPs / peak_FLOPs
+  memory_s     = HLO_bytes / HBM_bw
+  collective_s = Σ_kind alg_factor(kind) × bytes_kind / link_bw
+
+Hardware constants (assignment brief): 197 TFLOP/s bf16 per chip, 819 GB/s
+HBM, ~50 GB/s/link ICI.  Algorithm factors model ring collectives: an
+all-reduce moves ≈2× its payload per chip (reduce-scatter + all-gather
+phases); one-shot collectives move ≈1×.
+
+Also reports MODEL_FLOPS = 6·N·D (6·N_active·D for MoE) and the usefulness
+ratio MODEL_FLOPS / HLO_FLOPs — remat/dispatch waste shows up here.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.models.api import ArchConfig
+from .hlo import Cost
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s
+LINK_BW = 50e9               # bytes/s per ICI link
+
+ALG_FACTOR = {
+    "all-reduce": 2.0,           # ring RS + AG
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "ragged-all-to-all": 1.0,
+    "collective-permute": 1.0,
+    "collective-broadcast": 1.0,
+}
+
+
+@dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops: float
+    bytes: float
+    collective_bytes: dict
+    model_flops_per_chip: float = 0.0
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        """Lower-bound step time: terms overlap, so max (roofline)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs (per chip) — remat/redundancy waste."""
+        return self.model_flops_per_chip / self.flops if self.flops else 0.0
+
+    @property
+    def mfu(self) -> float:
+        """Model-FLOPs utilization at the roofline bound."""
+        if self.step_s == 0:
+            return 0.0
+        return self.model_flops_per_chip / (self.step_s * PEAK_FLOPS)
+
+    def to_dict(self) -> dict:
+        return {
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "flops": self.flops,
+            "bytes": self.bytes,
+            "collective_bytes": dict(self.collective_bytes),
+            "model_flops_per_chip": self.model_flops_per_chip,
+            "dominant": self.dominant, "useful_ratio": self.useful_ratio,
+            "mfu_bound": self.mfu, "step_s": self.step_s,
+        }
+
+
+def roofline(cost: Cost, *, model_flops_total: float = 0.0,
+             n_chips: int = 1) -> RooflineTerms:
+    coll_s = sum(ALG_FACTOR.get(k, 1.0) * v / LINK_BW
+                 for k, v in cost.collective_bytes.items())
+    return RooflineTerms(
+        compute_s=cost.flops / PEAK_FLOPS,
+        memory_s=cost.bytes / HBM_BW,
+        collective_s=coll_s,
+        flops=cost.flops,
+        bytes=cost.bytes,
+        collective_bytes=dict(cost.collective_bytes),
+        model_flops_per_chip=model_flops_total / max(n_chips, 1),
+    )
+
+
+# ---------------------------------------------------------------------------
+# MODEL_FLOPS accounting (6·N·D; MoE counts active experts only)
+# ---------------------------------------------------------------------------
+
+def count_params(arch: ArchConfig) -> tuple[float, float]:
+    """(total, active) parameter counts from the config (analytic)."""
+    D, hd = arch.d_model, arch.hd
+    per_pos_total = per_pos_active = 0.0
+    for mixer, ffn in arch.pattern:
+        p = 0.0
+        if mixer in ("attn", "local", "cross"):
+            p += D * arch.n_heads * hd + 2 * D * arch.n_kv_heads * hd \
+                + arch.n_heads * hd * D
+        elif mixer == "mamba":
+            d_in = 2 * D
+            G, N = 1, arch.ssm_state
+            H = d_in // arch.ssm_head_dim
+            d_in_proj = 2 * d_in + 2 * G * N + H
+            p += D * d_in_proj + d_in * D         # in_proj + out_proj
+        per_pos_total += p
+        per_pos_active += p
+        if ffn == "dense":
+            mats = 3 if arch.activation in ("swiglu", "geglu") else 2
+            per_pos_total += mats * D * arch.d_ff
+            per_pos_active += mats * D * arch.d_ff
+        elif ffn == "moe":
+            mats = 3 if arch.activation in ("swiglu", "geglu") else 2
+            per_expert = mats * D * arch.d_ff
+            per_pos_total += arch.n_experts * per_expert + D * arch.n_experts
+            per_pos_active += arch.top_k * per_expert + D * arch.n_experts
+    n_periods = arch.n_periods
+    total = per_pos_total * n_periods
+    active = per_pos_active * n_periods
+    # embeddings + head (counted once; tied or not, compute touches it once)
+    total += arch.vocab * D
+    active += arch.vocab * D
+    if not arch.tie_embeddings:
+        total += arch.vocab * D
+        active += arch.vocab * D
+    if arch.n_decoder_layers:
+        # decoder stack: self-attn + cross-attn + mlp per 2-layer period
+        dec = (2 * (D * arch.n_heads * hd + 2 * D * arch.n_kv_heads * hd
+                    + arch.n_heads * hd * D)
+               + (3 if arch.activation in ("swiglu", "geglu") else 2)
+               * D * arch.d_ff) * (arch.n_decoder_layers // 2 or 1)
+        total += dec
+        active += dec
+    return total, active
+
+
+def model_flops(arch: ArchConfig, n_tokens: float, *,
+                kind: str = "train") -> float:
+    """6·N_active·D for training; 2·N_active·D for inference forward."""
+    _, active = count_params(arch)
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * active * n_tokens

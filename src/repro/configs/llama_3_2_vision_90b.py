@@ -1,0 +1,15 @@
+"""llama-3.2-vision-90b — VLM backbone, cross-attn image layers.
+
+[hf:meta-llama/Llama-3.2-11B-Vision; unverified]
+100L d_model=8192 64H (GQA kv=8) d_ff=28672 vocab=128256
+Frontend (vision tower) is a STUB: input_specs() supplies precomputed
+patch embeddings; the cross-attention layers consume them.
+"""
+from repro.models.api import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llama-3.2-vision-90b", family="vlm", n_layers=100, d_model=8192,
+    n_heads=64, n_kv_heads=8, head_dim=128, d_ff=28672, vocab=128256,
+    pattern=(("attn", "dense"), ("attn", "dense"), ("attn", "dense"),
+             ("attn", "dense"), ("cross", "dense")),
+    frontend_len=1024, activation="swiglu", tie_embeddings=False)

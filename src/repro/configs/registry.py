@@ -1,0 +1,96 @@
+"""Architecture registry: --arch <id> resolves here.
+
+Each assigned architecture is an ArchConfig (full size, exercised only via
+the dry-run) plus a smoke_config() reduction (same family/pattern, tiny
+dims, runnable on CPU).  Shapes are the assignment's four cells.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+from repro.models.api import ArchConfig
+
+
+@dataclass(frozen=True)
+class ShapeCfg:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeCfg("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCfg("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCfg("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCfg("long_500k", 524288, 1, "decode"),
+}
+
+
+ARCHS: dict[str, ArchConfig] = {}
+
+
+def _register(cfg: ArchConfig) -> ArchConfig:
+    ARCHS[cfg.name] = cfg
+    return cfg
+
+
+# One module per assigned architecture (``--arch <id>`` resolves to the
+# CONFIG defined there); the registry just aggregates them.
+from . import (command_r_plus_104b, gemma2_27b, jamba_1_5_large_398b,  # noqa: E402
+               llama4_maverick_400b_a17b, llama_3_2_vision_90b,
+               mamba2_780m, qwen3_32b, qwen3_moe_235b_a22b, smollm_135m,
+               whisper_tiny)
+
+for _mod in (command_r_plus_104b, qwen3_32b, smollm_135m, gemma2_27b,
+             llama_3_2_vision_90b, mamba2_780m, whisper_tiny,
+             jamba_1_5_large_398b, qwen3_moe_235b_a22b,
+             llama4_maverick_400b_a17b):
+    _register(_mod.CONFIG)
+
+
+# ---------------------------------------------------------------------------
+# Smoke reductions: same family/pattern, tiny dims
+# ---------------------------------------------------------------------------
+
+def smoke_config(name: str) -> ArchConfig:
+    cfg = ARCHS[name]
+    period = cfg.period
+    kw = dict(
+        n_layers=2 * period, d_model=64,
+        n_heads=4, n_kv_heads=max(1, 4 * cfg.n_kv_heads // cfg.n_heads),
+        head_dim=16, d_ff=0 if cfg.d_ff == 0 else 96, vocab=211,
+        frontend_len=8 if cfg.frontend_len else 0,
+        window=8 if cfg.window else None,
+        aux_dim=32, ce_chunk=64,
+    )
+    if cfg.n_experts:
+        kw.update(n_experts=8, top_k=min(cfg.top_k, 2))
+    if cfg.ssm_state:
+        kw.update(ssm_state=16, ssm_head_dim=16, ssm_chunk=8)
+    if cfg.n_decoder_layers:
+        kw.update(n_decoder_layers=2)
+    return cfg.scaled(**kw)
+
+
+def get(name: str) -> ArchConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch '{name}'; known: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def skip_reason(arch_name: str, shape_name: str) -> str | None:
+    """Why an (arch × shape) cell is skipped (None = runnable)."""
+    cfg = ARCHS[arch_name]
+    if shape_name == "long_500k" and not cfg.long_context_ok:
+        return ("full-attention arch: long_500k requires a sub-quadratic "
+                "mixer (see DESIGN.md §Arch-applicability)")
+    return None
+
+
+def cells():
+    """All assigned (arch × shape) cells, with skip annotations."""
+    return [(name, sname, skip_reason(name, sname))
+            for name in ARCHS for sname in SHAPES]

@@ -1,0 +1,12 @@
+from .partition import (LayerProfile, cnn_profile, transformer_profile,
+                        select_split, split_costs)
+from .aggregator import AsyncAggregator, fedasync_update
+from .scheduler import Message, TaskScheduler
+from .flow_control import FlowController
+from .simulation import (Metrics, Sim, SimCluster, SimModel,
+                         heterogeneous_cluster, simulate_fedoptima)
+from .baselines import (REGISTRY, simulate_classic_fl, simulate_fedasync,
+                        simulate_fedbuff, simulate_oafl, simulate_pipar,
+                        simulate_splitfed)
+from .learning import (FedOptimaLearner, FullModelLearner, ModelAdapter,
+                       SplitLearner)

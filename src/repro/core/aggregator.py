@@ -1,0 +1,57 @@
+"""Asynchronous staleness-weighted aggregation (paper Alg. 4, lines 12–19).
+
+FedAsync-style: when a local device-side model (θ_dk, θ̃_dk, t_k) arrives,
+
+    if t - t_k > D:  skip (too stale)
+    α   = 1 / (t - t_k + 1)
+    θ_d  ← α θ_dk + (1-α) θ_d
+    θ̃_d  ← α θ̃_dk + (1-α) θ̃_d
+    t   ← t + 1
+
+All state is a plain pytree; the update is jit-able and is reused both by
+the event simulator and by the datacenter hybrid step (where it runs as an
+on-mesh collective update).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+
+from repro.models.common import tree_lerp
+
+
+@dataclass
+class AsyncAggregator:
+    """Host-side aggregator holding the global device-side model."""
+    theta_d: Any                     # global device-side params
+    theta_aux: Any                   # global auxiliary params
+    max_delay: int = 16              # D
+    version: int = 0                 # t
+    n_accepted: int = 0
+    n_rejected: int = 0
+    alpha_power: float = 1.0         # α = (t - t_k + 1)^-alpha_power
+
+    def aggregate(self, theta_dk: Any, theta_aux_k: Any, t_k: int) -> bool:
+        """Alg. 4 lines 12–19.  Returns True if the update was applied."""
+        staleness = self.version - t_k
+        if staleness > self.max_delay:
+            self.n_rejected += 1
+            return False
+        alpha = (1.0 / (staleness + 1.0)) ** self.alpha_power
+        self.theta_d = tree_lerp(self.theta_d, theta_dk, alpha)
+        self.theta_aux = tree_lerp(self.theta_aux, theta_aux_k, alpha)
+        self.version += 1
+        self.n_accepted += 1
+        return True
+
+    def snapshot(self):
+        """(θ_d, θ̃_d, t) sent back to a device (Alg. 4 line 20)."""
+        return self.theta_d, self.theta_aux, self.version
+
+
+def fedasync_update(global_tree, local_tree, staleness, alpha_power: float = 1.0):
+    """Pure functional form (used inside jit for the datacenter step)."""
+    alpha = (1.0 / (staleness + 1.0)) ** alpha_power
+    return tree_lerp(global_tree, local_tree, alpha)

@@ -1,0 +1,380 @@
+"""Baseline FL protocols as event simulations (paper §5.2 baselines).
+
+  classic FL [McMahan'17]  — full model on device, synchronous FedAvg
+  FedAsync   [Xie'23]      — full model, asynchronous aggregation
+  FedBuff    [Nguyen'22]   — full model, buffered async aggregation (Z)
+  SplitFed   [Thapa'22]    — offloading, per-iteration grad return, sync agg
+  PiPar      [Zhang'24]    — SplitFed + pipeline overlap on the device
+  OAFL       (§2.2)        — SplitFed protocol + FedAsync aggregation
+
+All share the Metrics structure of `simulation.py`, so figures compare
+like-for-like.  Server compute is serialized (single accelerator); links
+are full-duplex.  hooks objects (optional) drive real JAX training in
+event order — see core/learning.py.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .simulation import Metrics, Sim, SimCluster, SimModel
+
+
+# ---------------------------------------------------------------------------
+# Full-model methods: classic FL / FedAsync / FedBuff
+# ---------------------------------------------------------------------------
+
+def simulate_classic_fl(model: SimModel, cluster: SimCluster, *,
+                        duration: float, H: int = 10, hooks=None,
+                        churn=None, seed: int = 0) -> Metrics:
+    sim = Sim()
+    K = cluster.K
+    m = Metrics(K=K, duration=duration)
+    t_iter = [3 * model.full_fwd_flops / cluster.dev_flops[k] for k in range(K)]
+    active = np.ones(K, bool)
+    bw = cluster.dev_bw.astype(float).copy()
+    pending = {"n": 0}
+
+    def start_round():
+        m.rounds += 1
+        expected = [k for k in range(K) if active[k]]
+        if not expected:
+            sim.after(1.0, start_round)
+            return
+        pending["n"] = len(expected)
+        for k in expected:
+            tx = model.full_model_bytes / bw[k]
+            m.bytes_down += model.full_model_bytes
+            sim.after(tx, dev_train, k, H)
+
+    def dev_train(k, h_left):
+        if not active[k]:
+            arrive(None)
+            return
+        start = sim.t
+
+        def done():
+            m.dev_busy[k] += sim.t - start
+            m.dev_samples += model.batch_size
+            if hooks:
+                hooks.device_iter(k, False)
+            if h_left > 1:
+                dev_train(k, h_left - 1)
+            else:
+                tx = model.full_model_bytes / bw[k]
+                m.bytes_up += model.full_model_bytes
+                sim.after(tx, arrive, k)
+        sim.after(t_iter[k], done)
+
+    def arrive(k):
+        pending["n"] -= 1
+        if pending["n"] <= 0:
+            start = sim.t
+            dt = model.agg_flops * max(1, K) / cluster.srv_flops
+
+            def agg_done():
+                m.srv_busy += sim.t - start
+                m.aggregations += 1
+                if hooks:
+                    hooks.sync_aggregate()
+                start_round()
+            sim.after(dt, agg_done)
+
+    _install_churn(sim, churn, active, bw, K, on_rejoin=None)
+    start_round()
+    sim.run(duration)
+    return m
+
+
+def _simulate_async_full(model: SimModel, cluster: SimCluster, *, duration,
+                         H, buffer_size, hooks, churn, seed) -> Metrics:
+    """Shared core of FedAsync (buffer_size=1) and FedBuff (buffer_size=Z)."""
+    sim = Sim()
+    K = cluster.K
+    m = Metrics(K=K, duration=duration)
+    t_iter = [3 * model.full_fwd_flops / cluster.dev_flops[k] for k in range(K)]
+    active = np.ones(K, bool)
+    bw = cluster.dev_bw.astype(float).copy()
+    srv = {"busy": False, "buffer": 0}
+    queue: list[int] = []
+
+    def dev_round(k):
+        if not active[k]:
+            return
+        dev_train(k, H)
+
+    def dev_train(k, h_left):
+        if not active[k]:
+            return
+        start = sim.t
+
+        def done():
+            if not active[k]:
+                return
+            m.dev_busy[k] += sim.t - start
+            m.dev_samples += model.batch_size
+            if hooks:
+                hooks.device_iter(k, False)
+            if h_left > 1:
+                dev_train(k, h_left - 1)
+            else:
+                tx = model.full_model_bytes / bw[k]
+                m.bytes_up += model.full_model_bytes
+                sim.after(tx, arrive, k)
+        sim.after(t_iter[k], done)
+
+    def arrive(k):
+        queue.append(k)
+        srv["buffer"] += 1
+        kick()
+
+    def kick():
+        if srv["busy"] or srv["buffer"] < buffer_size or not queue:
+            return
+        srv["busy"] = True
+        start = sim.t
+        batch = queue[:buffer_size]
+        del queue[:buffer_size]
+        srv["buffer"] -= len(batch)
+        dt = model.agg_flops * len(batch) / cluster.srv_flops
+
+        def agg_done():
+            m.srv_busy += sim.t - start
+            m.aggregations += 1
+            if hooks:
+                for kk in batch:
+                    hooks.aggregate(kk)
+            for kk in batch:
+                tx = model.full_model_bytes / bw[kk] if active[kk] else 0.0
+                m.bytes_down += model.full_model_bytes if active[kk] else 0.0
+                sim.after(tx, dev_round, kk)
+            srv["busy"] = False
+            kick()
+        sim.after(dt, agg_done)
+
+    _install_churn(sim, churn, active, bw, K, on_rejoin=dev_round)
+    for k in range(K):
+        dev_round(k)
+    sim.run(duration)
+    return m
+
+
+def simulate_fedasync(model, cluster, *, duration, H=10, hooks=None,
+                      churn=None, seed=0) -> Metrics:
+    return _simulate_async_full(model, cluster, duration=duration, H=H,
+                                buffer_size=1, hooks=hooks, churn=churn, seed=seed)
+
+
+def simulate_fedbuff(model, cluster, *, duration, H=10, buffer_size=None,
+                     hooks=None, churn=None, seed=0) -> Metrics:
+    Z = buffer_size or max(2, cluster.K // 4)
+    return _simulate_async_full(model, cluster, duration=duration, H=H,
+                                buffer_size=Z, hooks=hooks, churn=churn, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# Offloading methods: SplitFed / PiPar / OAFL
+# ---------------------------------------------------------------------------
+
+def _simulate_split(model: SimModel, cluster: SimCluster, *, duration, H,
+                    sync_agg: bool, pipeline: bool, hooks, churn, seed) -> Metrics:
+    """Split-training protocol: per iteration the device sends activations,
+    the server trains that device's server-side model and returns gradients.
+
+    sync_agg=True  -> SplitFed/PiPar (round barrier across devices)
+    pipeline=True  -> PiPar (device overlaps next fwd while waiting)
+    sync_agg=False -> OAFL (async aggregation at round end, no barrier)
+    """
+    sim = Sim()
+    K = cluster.K
+    m = Metrics(K=K, duration=duration)
+    active = np.ones(K, bool)
+    bw = cluster.dev_bw.astype(float).copy()
+    srv = {"busy": False}
+    srv_queue: list[tuple] = []
+    barrier = {"n": 0}
+    t_fwd = [model.dev_fwd_flops / cluster.dev_flops[k] for k in range(K)]
+    t_bwd = [model.dev_bwd_flops / cluster.dev_flops[k] for k in range(K)]
+
+    def dev_round(k):
+        if not active[k]:
+            return
+        dev_fwd(k, H)
+
+    def dev_fwd(k, h_left):
+        if not active[k]:
+            return
+        start = sim.t
+
+        def fwd_done():
+            if not active[k]:
+                return
+            m.dev_busy[k] += sim.t - start
+            tx = model.act_bytes / bw[k]
+            m.bytes_up += model.act_bytes
+            sim.after(tx, srv_request, k, h_left)
+            # PiPar: overlap — start next microbatch fwd while waiting
+            if pipeline and h_left > 1:
+                start2 = sim.t
+
+                def fwd2_done():
+                    m.dev_busy[k] += sim.t - start2
+                sim.after(t_fwd[k], fwd2_done)
+        sim.after(t_fwd[k], fwd_done)
+
+    def srv_request(k, h_left):
+        srv_queue.append((k, h_left))
+        kick()
+
+    def kick():
+        if srv["busy"] or not srv_queue:
+            return
+        srv["busy"] = True
+        k, h_left = srv_queue.pop(0)
+        start = sim.t
+        dt = model.srv_flops_per_batch / cluster.srv_flops
+
+        def done():
+            m.srv_busy += sim.t - start
+            m.srv_batches += 1
+            if hooks:
+                hooks.server_train(k)
+            tx = model.act_bytes / bw[k] if active[k] else 0.0  # gradients back
+            m.bytes_down += model.act_bytes if active[k] else 0.0
+            sim.after(tx, dev_bwd, k, h_left)
+            srv["busy"] = False
+            kick()
+        sim.after(dt, done)
+
+    def dev_bwd(k, h_left):
+        if not active[k]:
+            if sync_agg:
+                barrier_arrive()
+            return
+        start = sim.t
+
+        def bwd_done():
+            if not active[k]:
+                if sync_agg:
+                    barrier_arrive()
+                return
+            # PiPar already accounted the overlapped fwd busy time
+            m.dev_busy[k] += sim.t - start
+            m.dev_samples += model.batch_size
+            if hooks:
+                hooks.device_iter(k, True)
+            if h_left > 1:
+                if pipeline:
+                    # fwd of next batch already ran; go straight to upload
+                    tx = model.act_bytes / bw[k]
+                    m.bytes_up += model.act_bytes
+                    sim.after(tx, srv_request, k, h_left - 1)
+                else:
+                    dev_fwd(k, h_left - 1)
+            else:
+                tx = model.dev_model_bytes / bw[k]
+                m.bytes_up += model.dev_model_bytes
+                sim.after(tx, model_arrive, k)
+        sim.after(t_bwd[k], bwd_done)
+
+    def model_arrive(k):
+        if sync_agg:
+            barrier_arrive()
+        else:
+            # OAFL: async aggregation immediately (serialized on server)
+            start = sim.t
+            dt = model.agg_flops / cluster.srv_flops
+
+            def agg_done():
+                m.srv_busy += sim.t - start
+                m.aggregations += 1
+                if hooks:
+                    hooks.aggregate(k)
+                tx = model.dev_model_bytes / bw[k] if active[k] else 0.0
+                m.bytes_down += model.dev_model_bytes if active[k] else 0.0
+                sim.after(tx, dev_round, k)
+            sim.after(dt, agg_done)
+
+    def barrier_arrive():
+        barrier["n"] -= 1
+        if barrier["n"] <= 0:
+            start = sim.t
+            dt = model.agg_flops * K / cluster.srv_flops
+
+            def agg_done():
+                m.srv_busy += sim.t - start
+                m.aggregations += 1
+                m.rounds += 1
+                if hooks:
+                    hooks.sync_aggregate()
+                start_round()
+            sim.after(dt, agg_done)
+
+    def start_round():
+        expected = [k for k in range(K) if active[k]]
+        if not expected:
+            sim.after(1.0, start_round)
+            return
+        barrier["n"] = len(expected)
+        for k in expected:
+            tx = model.dev_model_bytes / bw[k]
+            m.bytes_down += model.dev_model_bytes
+            sim.after(tx, dev_round, k)
+
+    _install_churn(sim, churn, active, bw, K,
+                   on_rejoin=None if sync_agg else dev_round)
+    if sync_agg:
+        start_round()
+    else:
+        for k in range(K):
+            dev_round(k)
+    sim.run(duration)
+    return m
+
+
+def simulate_splitfed(model, cluster, *, duration, H=10, hooks=None,
+                      churn=None, seed=0) -> Metrics:
+    return _simulate_split(model, cluster, duration=duration, H=H,
+                           sync_agg=True, pipeline=False, hooks=hooks,
+                           churn=churn, seed=seed)
+
+
+def simulate_pipar(model, cluster, *, duration, H=10, hooks=None,
+                   churn=None, seed=0) -> Metrics:
+    return _simulate_split(model, cluster, duration=duration, H=H,
+                           sync_agg=True, pipeline=True, hooks=hooks,
+                           churn=churn, seed=seed)
+
+
+def simulate_oafl(model, cluster, *, duration, H=10, hooks=None,
+                  churn=None, seed=0) -> Metrics:
+    return _simulate_split(model, cluster, duration=duration, H=H,
+                           sync_agg=False, pipeline=False, hooks=hooks,
+                           churn=churn, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+
+def _install_churn(sim, churn, active, bw, K, on_rejoin):
+    if churn is None:
+        return
+
+    def tick(i):
+        act, new_bw = churn.draw(sim.t)
+        for k in range(K):
+            was = active[k]
+            active[k] = act[k]
+            bw[k] = new_bw[k]
+            if not was and act[k] and on_rejoin is not None:
+                on_rejoin(k)
+        sim.after(churn.interval, tick, i + 1)
+    sim.after(churn.interval, tick, 0)
+
+
+REGISTRY = {
+    "fl": simulate_classic_fl,
+    "fedasync": simulate_fedasync,
+    "fedbuff": simulate_fedbuff,
+    "splitfed": simulate_splitfed,
+    "pipar": simulate_pipar,
+    "oafl": simulate_oafl,
+}

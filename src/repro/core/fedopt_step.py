@@ -1,0 +1,579 @@
+"""Datacenter-scale FedOptima: the paper's split-training pipeline as one
+pjit program per (arch × shape × mesh).
+
+Mapping (DESIGN.md §3): an FL "device" becomes a *device group* — one index
+of the mesh's data-parallel axes (pod × data), owning a ``model``-axis (TP)
+slice of chips.  Each group trains its own copy of the device-side block
+(params stacked on a leading group axis, sharded over dp) on its local
+non-IID shard, with gradients from the *auxiliary network* only — no
+gradient ever flows server→device (``stop_gradient`` on the activation
+hand-off).  The server-side block is ONE centrally-trained model (TP over
+``model``, FSDP over dp) consuming the activation stream.
+
+Idle-time elimination carries over: with ``pipeline_acts=True`` (the
+paper's queue semantics) the server trains on the *previous* step's
+scheduled activations, so the device half and the server half of the XLA
+program have no data dependency — the latency-hiding scheduler overlaps
+them, which is Fig. 1(d) at pod scale.
+
+Structure of one hybrid step::
+
+    devices (vmapped over G groups)          server (centralized)
+    ───────────────────────────────          ─────────────────────
+    fwd device block + aux head              train on act_buf (prev step)
+    local SGD on (θ_dk, θ̃_dk)               SGD/AdamW on θ_s
+    emit activations ──────────────▶ act_buf (next step)
+    every H steps: staleness-weighted async aggregation over groups
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import transformer as tfm
+from repro.models.api import ArchConfig
+from repro.optim.optimizers import make_optimizer
+from repro.parallel.sharding import Parallelism, param_specs, _param_spec, _validate
+
+Params = Any
+
+
+# ---------------------------------------------------------------------------
+# Step configuration
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class FedStepConfig:
+    arch: ArchConfig
+    l_split: int                      # device-side periods (split point, Eq. 8)
+    n_groups: int                     # FL device groups (= mesh dp size)
+    seq_len: int
+    per_group_batch: int              # sequences per group
+    H: int = 8                        # local iterations per round (Alg. 1);
+                                      # one jit step = one round of H
+                                      # micro-iterations + aggregation
+    lr_d: float = 0.05
+    lr_s: float = 0.05
+    server_opt: str = "sgd"           # paper Alg. 4 line 10 (adamw optional)
+    param_dtype: Any = jnp.float32
+    # --- pipeline/perf options (see EXPERIMENTS.md §Perf) ---
+    pipeline_acts: bool = True        # server trains on prev-step activations
+    remat: Any = "selective"          # True | False | "selective" (§Perf it.4:
+                                      # save post-TP-collective outputs only)
+    act_sharding: str = "seq"         # "seq" (Megatron-SP carries) | "none"
+    use_kernel: bool = False          # Pallas kernels for attn/SSD hot spots
+    agg_compress: bool = False        # int8 aggregation payload (cross-pod)
+    # Server gradient accumulation: apply the server optimizer once per
+    # round (grads summed over the H scheduled batches) instead of per
+    # batch (Alg. 4 line 10).  Keeps θ_s loop-invariant inside the round
+    # scan, so the FSDP weight all-gathers hoist out of the H-loop —
+    # collective traffic / H.  A beyond-paper systems trade-off: same data,
+    # one optimizer step per round.
+    server_accum: bool = False
+    ep_interior: bool = False         # pin MoE expert tensors to EP axis
+                                      # (§Perf it.6: refuted — forces
+                                      # redundant compute under GSPMD)
+    # Explicit shard_map expert parallelism for the server block: each
+    # ``model`` shard routes its dp-shard's tokens to its LOCAL experts and
+    # partial outputs psum over ``model``.  Avoids GSPMD's unsharded
+    # gather/scatter dispatch tables (the MoE cells' dominant traffic).
+    ep_shard_map: bool = True         # (§Perf it.7: 7x on MoE cells)
+
+    @property
+    def seq_shard_acts(self) -> bool:
+        return self.act_sharding == "seq"
+
+    @property
+    def global_batch(self) -> int:
+        return self.n_groups * self.per_group_batch
+
+    @property
+    def micro_batch(self) -> int:
+        """Sequences per group per local iteration (Alg. 1 line 4)."""
+        assert self.per_group_batch % self.H == 0, \
+            (self.per_group_batch, self.H)
+        return self.per_group_batch // self.H
+
+    @property
+    def frontend_dtype(self):
+        return self.param_dtype
+
+
+def default_l_split(arch: ArchConfig) -> int:
+    """Paper Eq. 8 with edge-device profiles puts the split early (devices
+    are weak); at pod scale we default to 1/8 of the periods on the device
+    side, clamped to a valid boundary."""
+    return max(1, min(arch.n_periods - 1, arch.n_periods // 8))
+
+
+# ---------------------------------------------------------------------------
+# State construction
+# ---------------------------------------------------------------------------
+
+def _init_one_group(rng, arch: ArchConfig, l_split: int, dtype):
+    full = tfm.init_params(rng, arch, dtype)
+    dev, srv = tfm.split_params(full, arch, l_split)
+    aux = tfm.make_aux_params(jax.random.fold_in(rng, 1), arch, dtype,
+                              regression=bool(arch.n_decoder_layers))
+    return dev, aux, srv
+
+
+def init_train_state(rng, cfg: FedStepConfig) -> Params:
+    """Concrete training state (smoke-scale; full configs use eval_shape)."""
+    dev1, aux1, srv = _init_one_group(rng, cfg.arch, cfg.l_split,
+                                      cfg.param_dtype)
+    G = cfg.n_groups
+    stack = lambda t: jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (G,) + x.shape), t)
+    s_init, _ = make_optimizer(cfg.server_opt)
+    state = {
+        "dev": stack(dev1),
+        "aux": stack(aux1),
+        "srv": srv,
+        "srv_opt": s_init(srv),
+        "step": jnp.zeros((), jnp.int32),
+        "version": jnp.zeros((), jnp.int32),
+    }
+    if cfg.pipeline_acts:
+        state["act_buf"] = _empty_act_buf(cfg)
+    return state
+
+
+def _empty_act_buf(cfg: FedStepConfig) -> Params:
+    """One scheduled activation batch (one micro-iteration's output)."""
+    arch = cfg.arch
+    B = cfg.n_groups * cfg.micro_batch
+    S = arch.frontend_len if arch.n_decoder_layers else cfg.seq_len
+    buf = {"acts": jnp.zeros((B, S, arch.d_model), cfg.param_dtype),
+           "labels": jnp.zeros((B, cfg.seq_len), jnp.int32)}
+    if arch.n_decoder_layers:
+        buf["tokens"] = jnp.zeros((B, cfg.seq_len), jnp.int32)
+    if arch.family == "vlm":
+        buf["frontend"] = jnp.zeros((B, arch.frontend_len, arch.d_model),
+                                    cfg.frontend_dtype)
+    return buf
+
+
+def abstract_train_state(cfg: FedStepConfig) -> Params:
+    """ShapeDtypeStruct state — no allocation (dry-run path)."""
+    return jax.eval_shape(lambda: init_train_state(jax.random.PRNGKey(0), cfg))
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStructs for every model input)
+# ---------------------------------------------------------------------------
+
+def train_input_specs(cfg: FedStepConfig) -> dict:
+    """Batch stand-ins: tokens/labels per group per local iteration (one
+    round = H micro-iterations); agg weights from the host control plane
+    (staleness-derived, §Alg. 4 line 16)."""
+    arch = cfg.arch
+    G, H, b, S = cfg.n_groups, cfg.H, cfg.micro_batch, cfg.seq_len
+    sds = jax.ShapeDtypeStruct
+    batch = {"tokens": sds((G, H, b, S), jnp.int32),
+             "labels": sds((G, H, b, S), jnp.int32),
+             "agg_weight": sds((G,), jnp.float32)}
+    if arch.frontend_len:
+        batch["frontend"] = sds((G, H, b, arch.frontend_len, arch.d_model),
+                                cfg.frontend_dtype)
+    return batch
+
+
+def concrete_train_batch(rng, cfg: FedStepConfig) -> dict:
+    arch = cfg.arch
+    out = {}
+    for k, s in train_input_specs(cfg).items():
+        if s.dtype == jnp.int32:
+            out[k] = jax.random.randint(jax.random.fold_in(rng, hash(k) % 97),
+                                        s.shape, 0, arch.vocab, jnp.int32)
+        else:
+            out[k] = jnp.ones(s.shape, s.dtype) if k == "agg_weight" else \
+                jax.random.normal(jax.random.fold_in(rng, hash(k) % 97),
+                                  s.shape, s.dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Sharding rules
+# ---------------------------------------------------------------------------
+
+def _stacked_specs(params: Params, par: Parallelism) -> Params:
+    """Specs for group-stacked device/aux params: leading G axis over the
+    dp axes; inner dims per the standard rules (FSDP off — dp is taken).
+
+    Exception: the device-side *input* embedding shards d_model (not
+    vocab) over ``model`` — the token gather and the scatter-add of its
+    gradient are then chip-local (no all-reduce of a (V, D) table per
+    micro-iteration).  Vocab-sharding only pays off on the logits path,
+    which the device block doesn't have (the aux head is factorized)."""
+    inner_par = replace(par, fsdp=False)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        if key.endswith("embed") and leaf.ndim == 3:
+            inner = _validate(P(None, par.tp_axis), leaf.shape[1:], inner_par)
+        else:
+            inner = _param_spec(key, leaf.shape[1:], inner_par)
+            inner = _validate(inner, leaf.shape[1:], inner_par)
+        specs.append(P(tuple(par.dp_axes), *tuple(inner)))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def _act_buf_specs(buf: Params, par: Parallelism, seq_shard: bool) -> Params:
+    dp = tuple(par.dp_axes)
+    tp = par.tp_axis
+    tp_size = par.mesh.shape[tp]
+
+    def spec(k, leaf):
+        b = dp if leaf.shape[0] % par.dp_size == 0 else None
+        if leaf.ndim == 3:      # (B, S, D) or (B, F, D)
+            s = tp if (seq_shard and leaf.shape[1] % tp_size == 0) else None
+            return P(b, s, None)
+        return P(b, None)       # (B, S) int labels/tokens
+    return {k: spec(k, v) for k, v in buf.items()}
+
+
+def state_specs(state: Params, cfg: FedStepConfig, par: Parallelism) -> Params:
+    specs = {
+        "dev": _stacked_specs(state["dev"], par),
+        "aux": _stacked_specs(state["aux"], par),
+        "srv": param_specs(state["srv"], par),
+        "step": P(),
+        "version": P(),
+    }
+    # optimizer state mirrors its parameters (ZeRO); scalars replicated
+    so = {}
+    for k, v in state["srv_opt"].items():
+        so[k] = specs["srv"] if k in ("mu", "nu", "velocity") else P()
+    specs["srv_opt"] = so
+    if "act_buf" in state:
+        specs["act_buf"] = _act_buf_specs(state["act_buf"], par,
+                                          cfg.seq_shard_acts)
+    return specs
+
+
+def batch_specs(cfg: FedStepConfig, par: Parallelism) -> dict:
+    dp = tuple(par.dp_axes)
+    out = {"tokens": P(dp, None, None, None),
+           "labels": P(dp, None, None, None),
+           "agg_weight": P(dp)}
+    if cfg.arch.frontend_len:
+        out["frontend"] = P(dp, None, None, None, None)
+    return out
+
+
+def to_named(specs: Params, mesh) -> Params:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# The hybrid train step
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: FedStepConfig, par: Parallelism):
+    """Returns step(state, batch) -> (state, metrics), pure & jit-ready.
+
+    One step = one FL round: a ``lax.scan`` over H local micro-iterations
+    (Alg. 1 lines 3-12 on every device group in parallel; Alg. 4 lines 5-10
+    on the server against the *previous* iteration's scheduled activation
+    batch, so the two halves have no data dependency and overlap), followed
+    by the end-of-round asynchronous aggregation (Alg. 4 lines 12-19).
+    Micro-iterating also bounds activation memory to one iteration's worth.
+    """
+    arch = cfg.arch
+    s_init, s_update = make_optimizer(cfg.server_opt)
+    # Activation-sharding policy.  Inside the vmapped device half the group
+    # axis has consumed dp, so act_batch=None there; the server half (not
+    # vmapped) shards batch over dp.  "seq" adds Megatron-SP carries.
+    constraints = cfg.act_sharding != "none"
+    seq = cfg.act_sharding == "seq"
+    dev_par = replace(par, ep=False, constraints=constraints, seq_shard=seq,
+                      act_batch=None, moe_interior=cfg.ep_interior)
+    srv_par = replace(par, ep=cfg.ep_shard_map, constraints=constraints,
+                      seq_shard=seq, act_batch=tuple(par.dp_axes),
+                      moe_interior=cfg.ep_interior)
+    kw = dict(use_kernel=cfg.use_kernel, remat=cfg.remat)
+
+    def device_half(dev, aux, batch_g):
+        """One FL device group: local-loss training (Alg. 1 lines 3-12).
+        Runs under vmap over the group axis — no cross-group collectives."""
+        if arch.n_decoder_layers:        # whisper: encoder on frame stubs
+            inputs, aux_labels = batch_g["frontend"], batch_g["frontend"]
+        else:
+            inputs, aux_labels = batch_g["tokens"], batch_g["labels"]
+        frontend = batch_g.get("frontend") if arch.family == "vlm" else None
+
+        def loss_fn(d, a):
+            loss, acts = tfm.device_train_loss(d, a, arch, inputs, aux_labels,
+                                               frontend=frontend,
+                                               parallelism=dev_par, **kw)
+            return loss, acts
+
+        (d_loss, acts), (gd, ga) = jax.value_and_grad(
+            loss_fn, argnums=(0, 1), has_aux=True)(dev, aux)
+        dev = jax.tree.map(lambda p, g: p - cfg.lr_d * g.astype(p.dtype),
+                           dev, gd)
+        aux = jax.tree.map(lambda p, g: p - cfg.lr_d * g.astype(p.dtype),
+                           aux, ga)
+        return dev, aux, acts, d_loss
+
+    def server_grads(srv, buf):
+        """One server iteration's loss + grads on the scheduled activation
+        batch (Alg. 4 lines 5-9) — the single global model, never stale."""
+        def loss_fn(s):
+            if arch.n_decoder_layers:
+                return tfm.server_encdec_loss(s, arch, buf["acts"],
+                                              buf["tokens"], buf["labels"],
+                                              parallelism=srv_par, **kw)
+            return tfm.server_forward_loss(s, arch, buf["acts"],
+                                           buf["labels"],
+                                           frontend=buf.get("frontend"),
+                                           parallelism=srv_par, **kw)
+        return jax.value_and_grad(loss_fn)(srv)
+
+    def server_half(srv, srv_opt, buf):
+        """Per-batch server SGD (Alg. 4 line 10)."""
+        s_loss, gs = server_grads(srv, buf)
+        srv, srv_opt = s_update(srv, gs, srv_opt, cfg.lr_s)
+        return srv, srv_opt, s_loss
+
+    def aggregate(dev_aux, weights):
+        """Async staleness-weighted aggregation over the group axis (Alg. 4
+        lines 12-19 telescoped: the sequential α-lerps over one round equal
+        a normalized weighted average with per-group staleness weights
+        supplied by the host control plane)."""
+        w = weights / jnp.maximum(jnp.sum(weights), 1e-9)
+
+        def mean_bcast(x):
+            xw = x.astype(jnp.float32) if cfg.agg_compress is False else \
+                _dequant(_quant(x))
+            g = jnp.tensordot(w, xw, axes=1).astype(x.dtype)
+            return jnp.broadcast_to(g[None], x.shape)
+
+        return jax.tree.map(mean_bcast, dev_aux)
+
+    def step(state, batch):
+        srv_const = state["srv"] if cfg.server_accum else None
+
+        def body(carry, batch_h):
+            if cfg.server_accum:
+                dev, aux, srv_acc, *rest = carry
+            else:
+                dev, aux, srv, srv_opt, *rest = carry
+            buf = rest[0] if cfg.pipeline_acts else None
+
+            dev, aux, acts, d_loss = jax.vmap(device_half)(dev, aux, batch_h)
+            G, b = acts.shape[0], acts.shape[1]
+            new_buf = {"acts": acts.reshape((G * b,) + acts.shape[2:]),
+                       "labels": batch_h["labels"].reshape(G * b, -1)}
+            if arch.n_decoder_layers:
+                new_buf["tokens"] = batch_h["tokens"].reshape(G * b, -1)
+            if arch.family == "vlm":
+                new_buf["frontend"] = batch_h["frontend"].reshape(
+                    (G * b,) + batch_h["frontend"].shape[2:])
+            if cfg.seq_shard_acts:
+                spec = _act_buf_specs({"acts": new_buf["acts"]}, par,
+                                      True)["acts"]
+                new_buf["acts"] = jax.lax.with_sharding_constraint(
+                    new_buf["acts"], NamedSharding(par.mesh, spec))
+            train_buf = buf if cfg.pipeline_acts else new_buf
+
+            if cfg.server_accum:
+                # θ_s loop-invariant: grads accumulate, FSDP gathers hoist
+                s_loss, gs = server_grads(srv_const, train_buf)
+                srv_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), srv_acc, gs)
+                carry = (dev, aux, srv_acc)
+            else:
+                srv, srv_opt, s_loss = server_half(srv, srv_opt, train_buf)
+                carry = (dev, aux, srv, srv_opt)
+            if cfg.pipeline_acts:
+                carry = carry + (new_buf,)
+            return carry, (jnp.mean(d_loss), s_loss)
+
+        # (G, H, ...) -> scan-major (H, G, ...)
+        xs = {k: jnp.moveaxis(v, 1, 0) for k, v in batch.items()
+              if k != "agg_weight"}
+        if cfg.server_accum:
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state["srv"])
+            carry = (state["dev"], state["aux"], zeros)
+        else:
+            carry = (state["dev"], state["aux"], state["srv"],
+                     state["srv_opt"])
+        if cfg.pipeline_acts:
+            carry = carry + (state["act_buf"],)
+        carry, (d_losses, s_losses) = jax.lax.scan(body, carry, xs)
+        if cfg.server_accum:
+            dev, aux, srv_acc = carry[:3]
+            gs = jax.tree.map(lambda a, p: (a / cfg.H).astype(p.dtype),
+                              srv_acc, state["srv"])
+            srv, srv_opt = s_update(state["srv"], gs, state["srv_opt"],
+                                    cfg.lr_s)
+        else:
+            dev, aux, srv, srv_opt = carry[:4]
+
+        # ---- end-of-round async aggregation (Alg. 1 l.13, Alg. 4 l.12-19)
+        dev, aux = aggregate((dev, aux), batch["agg_weight"])
+
+        new_state = dict(state, dev=dev, aux=aux, srv=srv, srv_opt=srv_opt,
+                         step=state["step"] + 1,
+                         version=state["version"] + 1)
+        if cfg.pipeline_acts:
+            new_state["act_buf"] = carry[-1]
+        metrics = {"d_loss": jnp.mean(d_losses), "s_loss": jnp.mean(s_losses)}
+        return new_state, metrics
+
+    return step
+
+
+def _quant(x):
+    """Per-tensor int8 quantization of the aggregation payload (cross-pod
+    model upload compression; see parallel/compression.py for the
+    error-feedback gradient variant)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    return jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8), scale
+
+
+def _dequant(qs):
+    q, scale = qs
+    return q.astype(jnp.float32) * scale
+
+
+# ---------------------------------------------------------------------------
+# Jit assembly (train)
+# ---------------------------------------------------------------------------
+
+def jit_train_step(cfg: FedStepConfig, mesh, *, donate: bool = True):
+    """jit(step) with explicit in/out shardings for the given mesh.
+    Returns (jitted, abstract_state, state_shardings, batch_shardings)."""
+    dp = tuple(a for a in mesh.axis_names if a != "model")
+    par = Parallelism(mesh=mesh, dp_axes=dp)
+    step = make_train_step(cfg, par)
+    state = abstract_train_state(cfg)
+    s_spec = to_named(state_specs(state, cfg, par), mesh)
+    b_spec = to_named(batch_specs(cfg, par), mesh)
+    m_spec = {"d_loss": NamedSharding(mesh, P()),
+              "s_loss": NamedSharding(mesh, P())}
+    jitted = jax.jit(step, in_shardings=(s_spec, b_spec),
+                     out_shardings=(s_spec, m_spec),
+                     donate_argnums=(0,) if donate else ())
+    return jitted, state, s_spec, b_spec
+
+
+# ---------------------------------------------------------------------------
+# Serving steps (prefill / decode) — single merged global model
+# ---------------------------------------------------------------------------
+
+def serve_param_specs(params: Params, par: Parallelism) -> Params:
+    return param_specs(params, par)
+
+
+def _cache_specs(caches, par: Parallelism) -> list:
+    """Decode caches: batch over dp when divisible; the long axis (KV slots
+    for attention, heads for SSM states) over ``model``.  KV-slot sharding
+    is the flash-decoding layout — each model shard scores its slice of the
+    context and the partial softmax reduces over ``model``."""
+    dp = tuple(par.dp_axes)
+    tp = par.tp_axis
+    dp_size = par.dp_size
+    tp_size = par.mesh.shape[tp]
+
+    def spec_leaf(path_key: str, leaf):
+        # leaves are stacked (n_periods, B, ...)
+        s = [None] * leaf.ndim
+        if leaf.ndim >= 2 and leaf.shape[1] % dp_size == 0:
+            s[1] = dp
+        if "conv" in path_key:                      # (n, B, K-1, Cd)
+            if leaf.ndim == 4 and leaf.shape[3] % tp_size == 0:
+                s[3] = tp
+        elif "ssm" in path_key:                     # (n, B, H, N, P)
+            if leaf.ndim == 5 and leaf.shape[2] % tp_size == 0:
+                s[2] = tp
+        elif leaf.ndim >= 3 and leaf.shape[2] % tp_size == 0:
+            s[2] = tp                               # (n, B, L, Hkv, hd): L
+        return P(*s)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(caches)
+    specs = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        specs.append(spec_leaf(key, leaf))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def jit_prefill(arch: ArchConfig, mesh, *, batch: int, seq_len: int,
+                param_dtype=jnp.float32, use_kernel: bool = False,
+                seq_shard: bool = True):
+    """Lowerable prefill: tokens (B, S) -> (last logits, primed caches)."""
+    dp = tuple(a for a in mesh.axis_names if a != "model")
+    par = Parallelism(mesh=mesh, dp_axes=dp)
+    b_div = batch % par.dp_size == 0
+    # ep=b_div: prefill MoE layers use shard_map expert parallelism too
+    # (§Perf it.7 — GSPMD materialises unsharded dispatch tables otherwise)
+    run_par = replace(par, ep=b_div, constraints=True, seq_shard=seq_shard,
+                      act_batch=dp if b_div else None, moe_interior=False)
+    sds = jax.ShapeDtypeStruct
+
+    params = jax.eval_shape(
+        lambda: tfm.init_params(jax.random.PRNGKey(0), arch, param_dtype))
+    p_spec = to_named(param_specs(params, par), mesh)
+    tokens = sds((batch, seq_len), jnp.int32)
+    t_spec = NamedSharding(mesh, P(dp if batch % par.dp_size == 0 else None,
+                                   None))
+    args = [params, tokens]
+    in_shardings = [p_spec, t_spec]
+    if arch.frontend_len:
+        args.append(sds((batch, arch.frontend_len, arch.d_model),
+                        param_dtype))
+        in_shardings.append(NamedSharding(
+            mesh, P(dp if batch % par.dp_size == 0 else None, None, None)))
+
+    def prefill_fn(params, tokens, frontend=None):
+        return tfm.prefill(params, arch, tokens, max_len=seq_len,
+                           frontend=frontend, use_kernel=use_kernel,
+                           parallelism=run_par, remat=True)
+
+    jitted = jax.jit(prefill_fn, in_shardings=tuple(in_shardings))
+    return jitted, tuple(args)
+
+
+def jit_decode(arch: ArchConfig, mesh, *, batch: int, cache_len: int,
+               param_dtype=jnp.float32):
+    """Lowerable decode: one new token against a KV cache of ``cache_len``."""
+    dp = tuple(a for a in mesh.axis_names if a != "model")
+    par = Parallelism(mesh=mesh, dp_axes=dp)
+    sds = jax.ShapeDtypeStruct
+
+    params = jax.eval_shape(
+        lambda: tfm.init_params(jax.random.PRNGKey(0), arch, param_dtype))
+    caches = jax.eval_shape(
+        lambda: tfm.init_serve_state(arch, batch, cache_len, param_dtype))
+    p_spec = to_named(param_specs(params, par), mesh)
+    c_spec = to_named(_cache_specs(caches, par), mesh)
+    b_ok = batch % par.dp_size == 0
+    tok_spec = NamedSharding(mesh, P(dp if b_ok else None, None))
+
+    def decode_fn(params, caches, token, position):
+        return tfm.serve_decode_step(params, arch, caches, token, position)
+
+    jitted = jax.jit(
+        decode_fn,
+        in_shardings=(p_spec, c_spec, tok_spec, NamedSharding(mesh, P())),
+        out_shardings=(NamedSharding(mesh, P(dp if b_ok else None, None)),
+                       c_spec),
+        donate_argnums=(1,))
+    args = (params, caches, sds((batch, 1), jnp.int32),
+            sds((), jnp.int32))
+    return jitted, args

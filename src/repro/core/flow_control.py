@@ -1,0 +1,100 @@
+"""Memory-bounded activation flow control (paper §3.4.1).
+
+Server-side: a **global** buffering cap ω bounds Σ_k |Q_k^act| ≤ ω,
+decoupling server memory from the number of devices (Eq. 3:
+μ = μ_model + ω·μ_act, versus OAFL's Eq. 2: μ = (K+1)μ_model + K·μ_act).
+
+Device-side: each device holds a Sender Status token.  After sending one
+activation batch the Sender deactivates until the server grants a
+'turn-on'.  The server grants tokens whenever the buffer (plus everything
+already promised: in-flight sends and granted-but-unused tokens) is below
+ω — so the cap holds as a **strict invariant**, never just in expectation::
+
+    buffered + inflight + active_tokens <= omega        (always)
+
+Grants are issued round-robin for fairness.  The controller is transport-
+agnostic: the event simulator and the datacenter driver both drive it via
+``can_send`` / ``mark_sent`` / ``on_enqueue`` / ``on_dequeue``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass
+class FlowController:
+    omega: int                              # global activation cap ω
+    sender_active: dict = field(default_factory=dict)   # device -> bool
+    buffered: int = 0                       # Σ_k |Q_k^act| (server view)
+    inflight: int = 0                       # sent-but-not-enqueued
+    grants: list = field(default_factory=list)  # grant log (for tests)
+    _rr: list = field(default_factory=list)     # round-robin order
+
+    def register(self, k: int):
+        """New device: sender starts inactive; a token is granted if the
+        cap allows (so at most ω senders are ever simultaneously armed)."""
+        if k in self.sender_active:
+            return
+        self.sender_active[k] = False
+        self._rr.append(k)
+        self._maybe_grant()
+
+    def unregister(self, k: int):
+        self.sender_active.pop(k, None)
+        if k in self._rr:
+            self._rr.remove(k)
+
+    # -- device side --
+    def can_send(self, k: int) -> bool:
+        return self.sender_active.get(k, False)
+
+    def mark_sent(self, k: int):
+        """Device consumed its token -> becomes an in-flight send."""
+        assert self.sender_active.get(k, False), f"device {k} sent without token"
+        self.sender_active[k] = False
+        self.inflight += 1
+
+    # -- server side --
+    def on_enqueue(self, k: int):
+        self.inflight = max(0, self.inflight - 1)
+        self.buffered += 1
+        self._maybe_grant()
+
+    def on_dequeue(self, k: int):
+        self.buffered = max(0, self.buffered - 1)
+        self._maybe_grant()
+
+    def on_device_left(self, k: int):
+        """A device dropped with a token or in-flight send: reclaim."""
+        if self.sender_active.pop(k, None):
+            pass
+        if k in self._rr:
+            self._rr.remove(k)
+        self._maybe_grant()
+
+    # -- invariant-preserving grant --
+    @property
+    def active_tokens(self) -> int:
+        return sum(1 for v in self.sender_active.values() if v)
+
+    @property
+    def promised(self) -> int:
+        return self.buffered + self.inflight + self.active_tokens
+
+    def _maybe_grant(self):
+        if not self._rr:
+            return
+        n = len(self._rr)
+        scanned = 0
+        while self.promised < self.omega and scanned < n:
+            k = self._rr.pop(0)      # true round-robin: a scanned device
+            self._rr.append(k)       # moves to the back of the grant queue
+            scanned += 1
+            if not self.sender_active.get(k, False):
+                self.sender_active[k] = True
+                self.grants.append(k)
+                scanned = 0  # re-scan: more room may remain
+
+    @property
+    def within_cap(self) -> bool:
+        return self.buffered <= self.omega and self.promised <= self.omega

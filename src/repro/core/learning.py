@@ -1,0 +1,300 @@
+"""Learning executors: real JAX training driven by the event simulators.
+
+The simulators (simulation.py / baselines.py) call hook methods in event
+order; these classes do the actual math, so accuracy experiments (Table 2,
+Fig. 6/7, 14/15) reflect genuine non-IID learning dynamics — staleness,
+imbalance, scheduling effects and all.
+
+A `ModelAdapter` abstracts over layer-list models (cnn.py,
+text_classifier.py): both expose forward/split/aux/ce with the same
+signatures, so one adapter class serves VGG-5, MobileNetV3ish and
+Transformer-6/12.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.pipeline import DeviceDataset
+from repro.models.common import tree_lerp
+from .aggregator import AsyncAggregator
+
+
+@dataclass(frozen=True)
+class ModelAdapter:
+    """Bundles a layer-list model module (cnn / text_classifier) + config."""
+    module: Any
+    cfg: Any
+
+    def init(self, rng):
+        return self.module.init_params(rng, self.cfg)
+
+    def split(self, params, l):
+        return self.module.split_params(params, l)
+
+    def make_aux(self, rng, l, variant="default"):
+        """Returns (aux_params, aux_spec) — params are pure array pytrees;
+        the spec (layer kinds, pooling) is static metadata."""
+        return self.module.make_aux_params(rng, self.cfg, l, variant)
+
+    def full_loss(self, params, x, y):
+        return self.module.loss_fn(params, self.cfg, x, y)
+
+    def accuracy(self, params, x, y):
+        return float(self.module.accuracy(params, self.cfg, x, y))
+
+    def device_forward(self, dev, x, l):
+        return self.module.forward(dev, self.cfg, x, upto=l)
+
+    def aux_loss(self, aux, aux_spec, acts, y):
+        if self.module.__name__.endswith("cnn"):
+            return self.module.aux_head_loss(aux, aux_spec, acts, y)
+        return self.module.aux_head_loss(aux, aux_spec, self.cfg, acts, y)
+
+    def server_loss(self, srv, acts, y, l):
+        return self.module.server_forward_loss(srv, self.cfg, acts, y, l)
+
+
+def _sgd(tree, grads, lr):
+    return jax.tree.map(lambda p, g: p - lr * g, tree, grads)
+
+
+# ---------------------------------------------------------------------------
+# FedOptima learner
+# ---------------------------------------------------------------------------
+
+class FedOptimaLearner:
+    """Implements Alg. 1 (device) + Alg. 4 (server) math.
+
+    Device k: one local iteration = fwd device block -> aux loss -> SGD on
+    (θ_dk, θ̃_dk).  Activations ship to the server only when the simulator's
+    flow control granted a token (send=True).  The server trains a single
+    θ_s on scheduled activation batches; device blocks aggregate per
+    FedAsync with staleness cap D.
+    """
+
+    def __init__(self, adapter: ModelAdapter, datasets: list[DeviceDataset],
+                 l_split: int, *, lr_d=0.05, lr_s=0.05, max_delay=16,
+                 aux_variant="default", seed=0, max_queue=64):
+        self.a = adapter
+        self.l = l_split
+        self.lr_d, self.lr_s = lr_d, lr_s
+        self.datasets = datasets
+        K = len(datasets)
+        rng = jax.random.PRNGKey(seed)
+        kf, ka = jax.random.split(rng)
+        full = adapter.init(kf)
+        dev0, srv = adapter.split(full, l_split)
+        aux0, aux_spec = adapter.make_aux(ka, l_split, aux_variant)
+        self.aux_spec = aux_spec
+        self.dev = [jax.tree.map(jnp.copy, dev0) for _ in range(K)]
+        self.aux = [jax.tree.map(jnp.copy, aux0) for _ in range(K)]
+        self.srv = srv
+        self.versions = [0] * K
+        self.agg = AsyncAggregator(theta_d=dev0, theta_aux=aux0, max_delay=max_delay)
+        self.act_queues: list[deque] = [deque(maxlen=max_queue) for _ in range(K)]
+        self.srv_steps = 0
+        self.dev_steps = 0
+
+        l_cap = l_split
+
+        @jax.jit
+        def dev_step(dev, aux, x, y):
+            def loss_fn(dv, au):
+                acts = self.a.device_forward(dv, x, l_cap)
+                return self.a.aux_loss(au, aux_spec, acts, y), acts
+            (loss, acts), grads = jax.value_and_grad(loss_fn, argnums=(0, 1),
+                                                     has_aux=True)(dev, aux)
+            dev = _sgd(dev, grads[0], self.lr_d)
+            aux = _sgd(aux, grads[1], self.lr_d)
+            return dev, aux, acts, loss
+
+        @jax.jit
+        def srv_step(srv, acts, y):
+            loss, grads = jax.value_and_grad(
+                lambda s: self.a.server_loss(s, acts, y, l_cap))(srv)
+            return _sgd(srv, grads, self.lr_s), loss
+
+        self._dev_step = dev_step
+        self._srv_step = srv_step
+
+    # --- hooks ---
+    def device_iter(self, k: int, send: bool):
+        x, y = self.datasets[k].next_batch()
+        self.dev[k], self.aux[k], acts, _ = self._dev_step(
+            self.dev[k], self.aux[k], x, y)
+        self.dev_steps += 1
+        if send:
+            self.act_queues[k].append((np.asarray(acts), y))
+
+    def server_train(self, k: int):
+        if not self.act_queues[k]:
+            return
+        acts, y = self.act_queues[k].popleft()
+        self.srv, _ = self._srv_step(self.srv, acts, y)
+        self.srv_steps += 1
+
+    def aggregate(self, k: int):
+        ok = self.agg.aggregate(self.dev[k], self.aux[k], self.versions[k])
+        theta_d, theta_aux, t = self.agg.snapshot()
+        self.dev[k] = jax.tree.map(jnp.copy, theta_d)
+        self.aux[k] = jax.tree.map(jnp.copy, theta_aux)
+        self.versions[k] = t
+
+    def sync_aggregate(self):  # unused in FedOptima; here for API parity
+        pass
+
+    # --- evaluation: merged global model ---
+    def eval_accuracy(self, x, y) -> float:
+        params = list(self.agg.theta_d) + list(self.srv)
+        return self.a.accuracy(params, x, y)
+
+
+# ---------------------------------------------------------------------------
+# Full-model learner (classic FL / FedAsync / FedBuff)
+# ---------------------------------------------------------------------------
+
+class FullModelLearner:
+    def __init__(self, adapter: ModelAdapter, datasets: list[DeviceDataset], *,
+                 lr=0.05, max_delay=16, seed=0):
+        self.a = adapter
+        self.datasets = datasets
+        K = len(datasets)
+        g = adapter.init(jax.random.PRNGKey(seed))
+        self.global_params = g
+        self.dev = [jax.tree.map(jnp.copy, g) for _ in range(K)]
+        self.versions = [0] * K
+        self.version = 0
+        self.max_delay = max_delay
+        self.lr = lr
+        self.dev_steps = 0
+
+        @jax.jit
+        def step(params, x, y):
+            loss, grads = jax.value_and_grad(
+                lambda p: self.a.full_loss(p, x, y))(params)
+            return _sgd(params, grads, self.lr), loss
+
+        self._step = step
+
+    def device_iter(self, k: int, _send: bool):
+        x, y = self.datasets[k].next_batch()
+        self.dev[k], _ = self._step(self.dev[k], x, y)
+        self.dev_steps += 1
+
+    def aggregate(self, k: int):
+        staleness = self.version - self.versions[k]
+        if staleness <= self.max_delay:
+            alpha = 1.0 / (staleness + 1.0)
+            self.global_params = tree_lerp(self.global_params, self.dev[k], alpha)
+            self.version += 1
+        self.dev[k] = jax.tree.map(jnp.copy, self.global_params)
+        self.versions[k] = self.version
+
+    def sync_aggregate(self):
+        self.global_params = jax.tree.map(
+            lambda *xs: sum(xs) / len(xs), *self.dev)
+        self.version += 1
+        for k in range(len(self.dev)):
+            self.dev[k] = jax.tree.map(jnp.copy, self.global_params)
+            self.versions[k] = self.version
+
+    def server_train(self, k: int):
+        pass
+
+    def eval_accuracy(self, x, y) -> float:
+        return self.a.accuracy(self.global_params, x, y)
+
+
+# ---------------------------------------------------------------------------
+# Split learner (SplitFed / PiPar / OAFL)
+# ---------------------------------------------------------------------------
+
+class SplitLearner:
+    """Split training with gradient return.  The simulator calls
+    server_train(k) (server fwd/bwd on device k's activations, producing
+    ∂loss/∂acts) *before* device_iter(k) (device-side VJP + SGD), matching
+    the wire protocol.  SplitFed keeps one server-side model per device;
+    sync_aggregate averages device and server halves each round; OAFL
+    aggregates asynchronously (α-weighted) per arriving device."""
+
+    def __init__(self, adapter: ModelAdapter, datasets: list[DeviceDataset],
+                 l_split: int, *, lr=0.05, max_delay=16, seed=0):
+        self.a = adapter
+        self.l = l_split
+        self.lr = lr
+        self.datasets = datasets
+        K = len(datasets)
+        full = adapter.init(jax.random.PRNGKey(seed))
+        dev0, srv0 = adapter.split(full, l_split)
+        self.dev = [jax.tree.map(jnp.copy, dev0) for _ in range(K)]
+        self.srv = [jax.tree.map(jnp.copy, srv0) for _ in range(K)]
+        self.g_dev = dev0
+        self.g_srv = srv0
+        self.versions = [0] * K
+        self.version = 0
+        self.max_delay = max_delay
+        self._pending: dict[int, tuple] = {}
+        self.dev_steps = 0
+        l_cap = l_split
+
+        @jax.jit
+        def srv_step(srv, acts, y):
+            def loss_fn(s, a):
+                return self.a.server_loss(s, a, y, l_cap)
+            (loss, (g_srv, g_acts)) = jax.value_and_grad(
+                loss_fn, argnums=(0, 1))(srv, acts)
+            return _sgd(srv, g_srv, self.lr), g_acts, loss
+
+        @jax.jit
+        def dev_step(dev, x, g_acts):
+            acts, vjp_fn = jax.vjp(lambda d: self.a.device_forward(d, x, l_cap), dev)
+            (g_dev,) = vjp_fn(g_acts)
+            return _sgd(dev, g_dev, self.lr)
+
+        self._srv_step = srv_step
+        self._dev_step = dev_step
+
+    def server_train(self, k: int):
+        x, y = self.datasets[k].next_batch()
+        acts = self.a.device_forward(self.dev[k], x, self.l)
+        self.srv[k], g_acts, _ = self._srv_step(self.srv[k], acts, y)
+        self._pending[k] = (x, np.asarray(g_acts))
+
+    def device_iter(self, k: int, _send: bool):
+        if k not in self._pending:
+            return
+        x, g_acts = self._pending.pop(k)
+        self.dev[k] = self._dev_step(self.dev[k], x, g_acts)
+        self.dev_steps += 1
+
+    def sync_aggregate(self):
+        K = len(self.dev)
+        self.g_dev = jax.tree.map(lambda *xs: sum(xs) / K, *self.dev)
+        self.g_srv = jax.tree.map(lambda *xs: sum(xs) / K, *self.srv)
+        self.version += 1
+        for k in range(K):
+            self.dev[k] = jax.tree.map(jnp.copy, self.g_dev)
+            self.srv[k] = jax.tree.map(jnp.copy, self.g_srv)
+            self.versions[k] = self.version
+
+    def aggregate(self, k: int):  # OAFL: async α-weighted
+        staleness = self.version - self.versions[k]
+        if staleness <= self.max_delay:
+            alpha = 1.0 / (staleness + 1.0)
+            self.g_dev = tree_lerp(self.g_dev, self.dev[k], alpha)
+            self.g_srv = tree_lerp(self.g_srv, self.srv[k], alpha)
+            self.version += 1
+        self.dev[k] = jax.tree.map(jnp.copy, self.g_dev)
+        self.srv[k] = jax.tree.map(jnp.copy, self.g_srv)
+        self.versions[k] = self.version
+
+    def eval_accuracy(self, x, y) -> float:
+        params = list(self.g_dev) + list(self.g_srv)
+        return self.a.accuracy(params, x, y)

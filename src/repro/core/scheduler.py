@@ -1,0 +1,90 @@
+"""Task Scheduler (paper Alg. 2 & 3): model/activation queues + counters.
+
+put():  models -> Q_model; activations -> Q_act[k]   (Alg. 2)
+get():  models first (priority); else the activation queue of the device
+        with the smallest consumption counter c_k      (Alg. 3)
+
+The counter-based policy prevents fast devices from dominating server-side
+training (Challenge 3).  A FIFO policy is included for the §6.5.2 ablation.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any
+
+
+@dataclass
+class Message:
+    kind: str              # "model" | "activation"
+    origin: int            # device id
+    content: Any = None
+    size_bytes: float = 0.0
+    enqueued_at: float = 0.0
+
+
+class TaskScheduler:
+    """Counter-based scheduler (default) or FIFO (ablation)."""
+
+    def __init__(self, n_devices: int, policy: str = "counter"):
+        assert policy in ("counter", "fifo")
+        self.policy = policy
+        self.q_model: deque[Message] = deque()
+        self.q_act: dict[int, deque[Message]] = {k: deque() for k in range(n_devices)}
+        self.counters: dict[int, int] = {k: 0 for k in range(n_devices)}
+        self._fifo_seq = 0
+        self._arrival: deque[int] = deque()   # device order of activation arrivals
+
+    # -- dynamic device membership (elastic) --
+    def add_device(self, k: int):
+        self.q_act.setdefault(k, deque())
+        self.counters.setdefault(k, 0)
+
+    def remove_device(self, k: int):
+        # keep already-buffered activations (they still train); stop counters
+        pass
+
+    # -- Alg. 2 --
+    def put(self, m: Message):
+        if m.kind == "model":
+            self.q_model.append(m)
+        else:
+            self.add_device(m.origin)
+            self.q_act[m.origin].append(m)
+            self._arrival.append(m.origin)
+
+    # -- Alg. 3 --
+    def get(self) -> Message | None:
+        if self.q_model:
+            return self.q_model.popleft()
+        if self.policy == "fifo":
+            while self._arrival:
+                k = self._arrival.popleft()
+                if self.q_act[k]:
+                    self.counters[k] += 1
+                    return self.q_act[k].popleft()
+            return None
+        # counter policy: argmin_k c_k over devices with pending activations
+        pending = [k for k, q in self.q_act.items() if q]
+        if not pending:
+            return None
+        k = min(pending, key=lambda d: (self.counters[d], d))
+        self.counters[k] += 1
+        # drop stale arrival-order entries lazily
+        return self.q_act[k].popleft()
+
+    # -- introspection --
+    @property
+    def total_buffered(self) -> int:
+        return sum(len(q) for q in self.q_act.values())
+
+    def buffered(self, k: int) -> int:
+        return len(self.q_act.get(k, ()))
+
+    @property
+    def has_model(self) -> bool:
+        return bool(self.q_model)
+
+    @property
+    def has_activation(self) -> bool:
+        return any(self.q_act.values())

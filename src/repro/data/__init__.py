@@ -1,0 +1,3 @@
+from .synthetic import classification_dataset, lm_dataset, lm_batches
+from .partitioner import dirichlet_partition, partition_stats
+from .pipeline import DeviceDataset

@@ -1,0 +1,150 @@
+"""Fused flash attention for TPU (Pallas), with GQA, causal masking,
+sliding-window ("local") attention, and Gemma-2 logit soft-capping.
+
+TPU adaptation notes (vs the CUDA flash-attention algorithm):
+  * tiling targets VMEM: one (block_q × head_dim) query tile and one
+    (block_k × head_dim) K/V tile resident per grid step; the MXU consumes
+    (block_q × head_dim) @ (head_dim × block_k) matmuls, so block sizes are
+    multiples of 128 and head_dim is the contracting dim;
+  * the online-softmax running state (m, l, acc) lives in VMEM scratch and
+    is carried across the innermost grid dimension (TPU grid steps execute
+    sequentially, which replaces CUDA's per-CTA shared-memory loop);
+  * causal/window block skipping is a `pl.when` guard on whole tiles (the
+    TPU equivalent of warp-level early exit).
+
+Layout: q (B, H, S, hd); k, v (B, Hkv, Skv, hd).  `ops.flash_attention`
+wraps the (B, S, H, hd) public layout.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+               scale: float, causal: bool, window: int | None,
+               logit_cap: float | None, block_q: int, block_k: int,
+               seq_q: int, seq_k: int):
+    i = pl.program_id(2)          # query block
+    j = pl.program_id(3)          # kv block
+    nk = pl.num_programs(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = i * block_q
+    k_start = j * block_k
+
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)            # (bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)            # (bk, hd)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if logit_cap is not None:
+            s = logit_cap * jnp.tanh(s / logit_cap)
+
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = kpos < seq_k                             # padding
+        if causal:
+            mask = jnp.logical_and(mask, kpos <= qpos)
+        if window is not None:
+            mask = jnp.logical_and(mask, kpos > qpos - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_new)                 # NEG_INF-safe: exp(-inf)≈0
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        l_new = alpha * l_prev + jnp.sum(p, axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + \
+            jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    # tile-level skip: in causal/window mode many (i, j) tiles are fully
+    # masked — skip their compute entirely (TPU analogue of early exit).
+    if causal or window is not None:
+        relevant = jnp.bool_(True)
+        if causal:
+            relevant = jnp.logical_and(relevant,
+                                       k_start <= q_start + block_q - 1)
+        if window is not None:
+            relevant = jnp.logical_and(
+                relevant, k_start + block_k - 1 > q_start - window)
+        pl.when(relevant)(_compute)
+    else:
+        _compute()
+
+    @pl.when(j == nk - 1)
+    def _finalize():
+        l = l_scr[...]
+        safe = jnp.where(l > 0.0, l, 1.0)
+        o_ref[0, 0] = (acc_scr[...] / safe[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q, k, v, *, causal=True, window=None, logit_cap=None,
+                         block_q=128, block_k=128, interpret=False):
+    """q: (B, H, S, hd); k, v: (B, Hkv, Skv, hd).  Returns (B, H, S, hd)."""
+    B, H, S, hd = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    assert H % Hkv == 0
+    group = H // Hkv
+    block_q = min(block_q, S)
+    block_k = min(block_k, Skv)
+
+    # pad sequences to block multiples (mask handles the tail)
+    def pad_to(x, axis, mult):
+        pad = (-x.shape[axis]) % mult
+        if pad == 0:
+            return x
+        cfg = [(0, 0)] * x.ndim
+        cfg[axis] = (0, pad)
+        return jnp.pad(x, cfg)
+
+    qp = pad_to(q, 2, block_q)
+    kp = pad_to(k, 2, block_k)
+    vp = pad_to(v, 2, block_k)
+    Sp, Skvp = qp.shape[2], kp.shape[2]
+    grid = (B, H, Sp // block_q, Skvp // block_k)
+
+    kernel = functools.partial(
+        _fa_kernel, scale=1.0 / math.sqrt(hd), causal=causal, window=window,
+        logit_cap=logit_cap, block_q=block_q, block_k=block_k,
+        seq_q=S, seq_k=Skv)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd),
+                               lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sp, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :, :S]

@@ -1,0 +1,62 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+On CPU (this container) the kernels run with interpret=True — the kernel
+body executes in Python per grid step, validating the exact TPU program
+logic.  On TPU backends they compile to Mosaic.  `use_kernels` is decided
+per-call or globally via set_kernel_mode.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_bhsd
+from .ssd import ssd_chunked_pallas
+
+_FORCE_INTERPRET: bool | None = None
+
+
+def set_kernel_mode(interpret: bool | None):
+    """None = auto (interpret on CPU); True/False forces."""
+    global _FORCE_INTERPRET
+    _FORCE_INTERPRET = interpret
+
+
+def _interpret() -> bool:
+    if _FORCE_INTERPRET is not None:
+        return _FORCE_INTERPRET
+    return jax.default_backend() == "cpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "logit_cap",
+                                   "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal=True, window=None, logit_cap=None,
+                    block_q=128, block_k=128):
+    """q: (B, S, H, hd); k, v: (B, Skv, Hkv, hd) -> (B, S, H, hd)."""
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    out = flash_attention_bhsd(qt, kt, vt, causal=causal, window=window,
+                               logit_cap=logit_cap, block_q=block_q,
+                               block_k=block_k, interpret=_interpret())
+    return jnp.swapaxes(out, 1, 2)
+
+
+@partial(jax.jit, static_argnames=("chunk",))
+def ssd(x, dt, A, Bm, Cm, *, chunk=128):
+    """Chunked SSD sequence mixer.  x: (B, T, H, P); dt: (B, T, H);
+    A: (H,); Bm, Cm: (B, T, G, N) -> y (B, T, H, P).  Pads T to a chunk
+    multiple (zero dt ⇒ identity decay, zero input ⇒ no state change)."""
+    T = x.shape[1]
+    chunk = min(chunk, T) if T % min(chunk, T) == 0 else chunk
+    pad = (-T) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    y = ssd_chunked_pallas(x, dt, A, Bm, Cm, chunk=chunk,
+                           interpret=_interpret())
+    return y[:, :T]

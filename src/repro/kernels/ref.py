@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness references the kernel tests sweep against
+(shapes × dtypes, interpret=True).  They are deliberately simple and
+readable — no tiling, no numerics tricks beyond f32 accumulation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_reference(q, k, v, *, causal=True, window=None,
+                              logit_cap=None):
+    """q: (B, S, H, hd); k, v: (B, Skv, Hkv, hd) with H % Hkv == 0.
+    Returns (B, S, H, hd).  f32 softmax, input dtype out."""
+    B, S, H, hd = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    group = H // Hkv
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    qg = q.reshape(B, S, Hkv, group, hd).astype(jnp.float32)
+    logits = jnp.einsum("bskgh,btkh->bkgst", qg, k.astype(jnp.float32)) * scale
+    if logit_cap is not None:
+        logits = logit_cap * jnp.tanh(logits / logit_cap)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((S, Skv), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    probs = jnp.where(jnp.isnan(probs), 0.0, probs)  # fully-masked rows
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, v.astype(jnp.float32))
+    return out.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def ssd_reference(x, dt, A, B, C, initial_state=None):
+    """Naive sequential SSD scan (Mamba2 §3): per-step recurrence
+
+        h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t^T
+        y_t = C_t · h_t
+
+    x: (b, T, H, P); dt: (b, T, H); A: (H,) (negative); B, C: (b, T, G, N).
+    Returns (y (b, T, H, P), final state (b, H, N, P)).  All f32.
+    """
+    b, T, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = H // G
+    x = x.astype(jnp.float32)
+    dt = dt.astype(jnp.float32)
+    Bf = jnp.repeat(B.astype(jnp.float32), rep, axis=2)  # (b, T, H, N)
+    Cf = jnp.repeat(C.astype(jnp.float32), rep, axis=2)
+    h0 = (jnp.zeros((b, H, N, P), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    def step(h, inp):
+        xt, dtt, Bt, Ct = inp
+        a = jnp.exp(dtt * A[None, :])                     # (b, H)
+        h = h * a[..., None, None] + jnp.einsum("bhn,bh,bhp->bhnp", Bt, dtt, xt)
+        y = jnp.einsum("bhn,bhnp->bhp", Ct, h)
+        return h, y
+
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(Bf, 1, 0), jnp.moveaxis(Cf, 1, 0))
+    h, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1), h

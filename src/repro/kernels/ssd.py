@@ -1,0 +1,100 @@
+"""Mamba2 SSD (state-space duality) chunked scan as a Pallas TPU kernel.
+
+Algorithm (per batch × head, chunk length Q):
+  intra-chunk:  Y_intra = ((C B^T) ⊙ decay_tril) (dt ⊙ X)       — MXU matmuls
+  chunk state:  S_c     = B^T diag(w) (dt ⊙ X),  w_s = e^{L_Q - L_s}
+  recurrence:   h_c     = e^{L_Q} h_{c-1} + S_c                 — VMEM carry
+  inter-chunk:  Y_inter = (C ⊙ e^{L})  h_{c-1}
+
+TPU adaptation: the chunk dimension is the innermost grid axis; TPU grid
+steps run sequentially, so the (N × P) state lives in VMEM scratch and is
+carried across chunks — this replaces the GPU implementation's separate
+state-passing kernel + inter-block sync.  All matmuls are (Q×N)(N×P)-style
+MXU shapes; Q, N, P default to 128/128/64.
+
+Layouts: x (B, T, H, P); dt (B, T, H); A (H,); Bm/Cm (B, T, G, N);
+out (B, T, H, P).  T % Q == 0 (ops.py pads).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, h_scr, *,
+                chunk: int):
+    c_idx = pl.program_id(2)
+
+    @pl.when(c_idx == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)          # (Q, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)           # (Q,)
+    a = a_ref[0]                                       # scalar A_h (negative)
+    Bm = b_ref[0, :, 0, :].astype(jnp.float32)         # (Q, N)
+    Cm = c_ref[0, :, 0, :].astype(jnp.float32)         # (Q, N)
+
+    la = dt * a                                        # log-decay per step, <= 0
+    Lcum = jnp.cumsum(la)                              # (Q,)
+    Ltot = Lcum[-1]
+
+    xb = x * dt[:, None]                               # dt-weighted input (Q, P)
+
+    # intra-chunk quadratic term
+    scores = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # (Q, Q)
+    diff = Lcum[:, None] - Lcum[None, :]               # L_t - L_s
+    tri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    decay = jnp.where(tri, jnp.exp(diff), 0.0)
+    y_intra = jax.lax.dot_general(scores * decay, xb, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+
+    # inter-chunk contribution from carried state
+    h_prev = h_scr[...]                                # (N, P)
+    y_inter = jax.lax.dot_general(Cm * jnp.exp(Lcum)[:, None], h_prev,
+                                  (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+
+    # state update: h = e^{Ltot} h + B^T diag(e^{Ltot - Lcum}) xb
+    w = jnp.exp(Ltot - Lcum)                           # (Q,)
+    S_c = jax.lax.dot_general(Bm * w[:, None], xb, (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)     # (N, P)
+    h_scr[...] = jnp.exp(Ltot) * h_prev + S_c
+
+    y_ref[0, :, 0, :] = (y_intra + y_inter).astype(y_ref.dtype)
+
+
+def ssd_chunked_pallas(x, dt, A, Bm, Cm, *, chunk=128, interpret=False):
+    """x: (B, T, H, P); dt: (B, T, H); A: (H,); Bm, Cm: (B, T, G, N).
+    Returns y (B, T, H, P).  T must be divisible by chunk (ops.py pads)."""
+    Bb, T, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    assert T % chunk == 0, (T, chunk)
+    rep = H // G
+    nc = T // chunk
+    grid = (Bb, H, nc)
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, chunk, 1, N),
+                         lambda b, h, c, r=rep: (b, c, h // r, 0)),
+            pl.BlockSpec((1, chunk, 1, N),
+                         lambda b, h, c, r=rep: (b, c, h // r, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, 1, P), lambda b, h, c: (b, c, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bb, T, H, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A.astype(jnp.float32), Bm, Cm)

@@ -1,0 +1,221 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+# ^ MUST precede any jax import: jax locks the device count on first init.
+# (This also means no `from __future__ import annotations` in this module.)
+
+DOC = """Multi-pod dry-run: lower + compile every (architecture × input shape)
+cell on the production mesh and record memory/cost/roofline evidence.
+
+Usage::
+
+    python -m repro.launch.dryrun --arch smollm-135m --shape train_4k
+    python -m repro.launch.dryrun --all --mesh single --out results/dryrun
+    python -m repro.launch.dryrun --all --mesh multi  --out results/dryrun
+
+``--mesh single`` = (data=16, model=16), 256 chips (one pod);
+``--mesh multi``  = (pod=2, data=16, model=16), 512 chips.  The multi-pod
+pass proves the ``pod`` axis shards; the roofline table reads the
+single-pod JSONs.
+
+Per cell this prints (and writes to JSON): compiled.memory_analysis()
+(proves it fits), compiled.cost_analysis() (XLA's while-body-once FLOPs/
+bytes), and the trip-count-scaled HLO parse (FLOPs, HBM bytes, collective
+bytes by kind) that feeds EXPERIMENTS.md §Roofline.
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import analyze_text, model_flops, roofline
+from repro.configs import registry
+from repro.core import fedopt_step as F
+from repro.launch.mesh import make_production_mesh, n_groups_of
+
+
+def lower_cell(arch_name: str, shape_name: str, mesh, *,
+               step_overrides: dict | None = None):
+    """Build + lower + compile one cell.  Returns (lowered, compiled, meta)."""
+    arch = registry.get(arch_name)
+    shape = registry.SHAPES[shape_name]
+    overrides = dict(step_overrides or {})
+    arch_kw = overrides.pop("arch_kw", None)
+    if arch_kw:
+        arch = arch.scaled(**arch_kw)
+    meta = {"arch": arch_name, "shape": shape_name,
+            "mesh": dict(zip(mesh.axis_names, mesh.devices.shape)),
+            "n_chips": mesh.devices.size}
+
+    if shape.kind == "train":
+        G = n_groups_of(mesh)
+        per_group = shape.global_batch // G
+        H = overrides.pop("H", min(8, per_group))
+        cfg = F.FedStepConfig(
+            arch=arch, l_split=F.default_l_split(arch), n_groups=G,
+            seq_len=shape.seq_len, per_group_batch=per_group, H=H,
+            param_dtype=jnp.bfloat16, **overrides)
+        jitted, state_sds, _, _ = F.jit_train_step(cfg, mesh)
+        lowered = jitted.lower(state_sds, F.train_input_specs(cfg))
+        meta.update(kind="train", l_split=cfg.l_split, H=H,
+                    global_batch=shape.global_batch, seq_len=shape.seq_len)
+        n_tokens = shape.global_batch * shape.seq_len
+        meta["model_flops"] = model_flops(arch, n_tokens, kind="train")
+    elif shape.kind == "prefill":
+        jitted, args = F.jit_prefill(arch, mesh, batch=shape.global_batch,
+                                     seq_len=shape.seq_len,
+                                     param_dtype=jnp.bfloat16, **overrides)
+        lowered = jitted.lower(*args)
+        meta.update(kind="prefill", global_batch=shape.global_batch,
+                    seq_len=shape.seq_len)
+        n_tokens = shape.global_batch * shape.seq_len
+        meta["model_flops"] = model_flops(arch, n_tokens, kind="infer")
+    else:  # decode
+        jitted, args = F.jit_decode(arch, mesh, batch=shape.global_batch,
+                                    cache_len=shape.seq_len,
+                                    param_dtype=jnp.bfloat16, **overrides)
+        lowered = jitted.lower(*args)
+        meta.update(kind="decode", global_batch=shape.global_batch,
+                    cache_len=shape.seq_len)
+        meta["model_flops"] = model_flops(arch, shape.global_batch,
+                                          kind="infer")
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    meta["compile_s"] = round(time.time() - t0, 1)
+    return lowered, compiled, meta
+
+
+def kernel_exclude_fn(arch, shape):
+    """Shape predicate for the Pallas-deployed roofline: attention-score
+    and SSD decay/score tiles (4-D, kv-length minor dim / square chunk
+    dims) stay in VMEM inside the fused kernels and never round-trip HBM.
+    The jnp fallback path materialises them — both numbers are reported."""
+    S = shape.seq_len
+    kv_lens = set()
+    for base in {S, arch.frontend_len or 0, arch.window or 0}:
+        for div in (1, 2, 4, 8, 16, 32):
+            if base and base % div == 0 and base // div >= 256:
+                kv_lens.add(base // div)
+    Q = arch.ssm_chunk
+
+    def fn(dims):
+        if len(dims) != 4:
+            return False
+        if dims[-1] in kv_lens and dims[-2] >= 64:      # attention scores
+            return True
+        if arch.ssm_state and dims[1] == dims[2] and \
+                dims[1] in (Q, min(Q, S)):              # SSD chunk tiles
+            return True
+        return False
+    return fn
+
+
+def run_cell(arch_name: str, shape_name: str, mesh, *,
+             step_overrides: dict | None = None, verbose: bool = True,
+             hlo_out: str = None):
+    """Dry-run one cell; returns the result record (JSON-serializable)."""
+    skip = registry.skip_reason(arch_name, shape_name)
+    if skip:
+        return {"arch": arch_name, "shape": shape_name, "status": "skip",
+                "reason": skip}
+    try:
+        lowered, compiled, meta = lower_cell(arch_name, shape_name, mesh,
+                                             step_overrides=step_overrides)
+    except Exception as e:  # a dry-run failure is a bug in our system
+        return {"arch": arch_name, "shape": shape_name, "status": "error",
+                "error": f"{type(e).__name__}: {e}",
+                "traceback": traceback.format_exc()[-2000:]}
+    if hlo_out:
+        import gzip
+        with gzip.open(hlo_out, "wt") as f:
+            f.write(compiled.as_text())
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    mem = {
+        "argument_bytes": int(ma.argument_size_in_bytes),
+        "output_bytes": int(ma.output_size_in_bytes),
+        "temp_bytes": int(ma.temp_size_in_bytes),
+        "alias_bytes": int(ma.alias_size_in_bytes),
+    }
+    text = compiled.as_text()
+    arch = registry.get(arch_name)
+    shape = registry.SHAPES[shape_name]
+    mf = meta.get("model_flops", 0.0)
+    cost = analyze_text(text)
+    terms = roofline(cost, model_flops_total=mf, n_chips=meta["n_chips"])
+    kcost = analyze_text(text, exclude_fn=kernel_exclude_fn(arch, shape))
+    kterms = roofline(kcost, model_flops_total=mf, n_chips=meta["n_chips"])
+    rec = {"status": "ok", **meta, "memory_analysis": mem,
+           "xla_cost_analysis": {"flops": ca.get("flops", 0.0),
+                                 "bytes_accessed": ca.get("bytes accessed", 0.0)},
+           "roofline": terms.to_dict(),
+           "roofline_kernelized": kterms.to_dict()}
+    if verbose:
+        print(f"[{rec['arch']} × {rec['shape']}] compile {meta['compile_s']}s  "
+              f"temp {mem['temp_bytes']/1e9:.2f} GB/dev  "
+              f"flops/dev {terms.flops:.3e}  dominant={kterms.dominant}  "
+              f"mfu_bound={kterms.mfu:.3f}")
+        print(f"  memory_analysis: {mem}")
+        print(f"  cost_analysis(XLA, body-once): {rec['xla_cost_analysis']}")
+        print(f"  roofline (jnp path, s/chip): compute={terms.compute_s:.4f} "
+              f"memory={terms.memory_s:.4f} collective={terms.collective_s:.4f}")
+        print(f"  roofline (Pallas-fused, s/chip): compute={kterms.compute_s:.4f} "
+              f"memory={kterms.memory_s:.4f} collective={kterms.collective_s:.4f}")
+    return rec
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=DOC)
+    p.add_argument("--arch", default=None, help="architecture id")
+    p.add_argument("--shape", default=None,
+                   choices=list(registry.SHAPES) + [None])
+    p.add_argument("--mesh", default="single", choices=("single", "multi"))
+    p.add_argument("--all", action="store_true",
+                   help="sweep every (arch × shape) cell")
+    p.add_argument("--out", default=None, help="directory for JSON records")
+    p.add_argument("--save-hlo", action="store_true",
+                   help="also save gzipped optimized HLO per cell (enables "
+                        "offline re-analysis without recompiling)")
+    args = p.parse_args()
+
+    mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    cells = ([(args.arch, args.shape)] if not args.all else
+             [(a, s) for a in registry.ARCHS for s in registry.SHAPES])
+
+    n_ok = n_skip = n_err = 0
+    for arch_name, shape_name in cells:
+        hlo_out = None
+        if args.save_hlo and args.out:
+            os.makedirs(args.out, exist_ok=True)
+            hlo_out = os.path.join(
+                args.out, f"{arch_name}__{shape_name}__{args.mesh}.hlo.gz")
+        rec = run_cell(arch_name, shape_name, mesh, hlo_out=hlo_out)
+        rec["mesh_kind"] = args.mesh
+        status = rec["status"]
+        n_ok += status == "ok"
+        n_skip += status == "skip"
+        n_err += status == "error"
+        if status == "skip":
+            print(f"[{arch_name} × {shape_name}] SKIP: {rec['reason']}")
+        elif status == "error":
+            print(f"[{arch_name} × {shape_name}] ERROR: {rec['error']}")
+        if args.out:
+            os.makedirs(args.out, exist_ok=True)
+            path = os.path.join(
+                args.out, f"{arch_name}__{shape_name}__{args.mesh}.json")
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+    print(f"\ndry-run[{args.mesh}]: {n_ok} ok, {n_skip} skip, {n_err} error "
+          f"of {len(cells)} cells")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,102 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+# ^ MUST precede any jax import (see dryrun.py).
+
+DOC = """Perf hillclimbing driver (EXPERIMENTS.md §Perf).
+
+Compiles named step-config variants of the three chosen (arch × shape)
+cells, re-derives the roofline terms per variant, and appends the records
+to results/perf/.  Each variant is one hypothesis → change → measure
+iteration; the narrative lives in EXPERIMENTS.md.
+
+    python -m repro.launch.perf --cell command-r   # one cell's ladder
+    python -m repro.launch.perf                    # all three
+"""
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.dryrun import run_cell
+from repro.launch.mesh import make_production_mesh
+
+# (label, overrides) ladders.  Overrides feed FedStepConfig (plus the
+# special key arch_kw -> ArchConfig.scaled).  Each ladder starts from the
+# paper-faithful baseline and applies ONE change at a time (cumulative).
+LADDERS = {
+    "command-r": ("command-r-plus-104b", "train_4k", [
+        ("0_no_constraints", {"act_sharding": "none"}),
+        ("1_tp_sp_constraints", {}),                       # default config
+        ("2_server_accum", {"server_accum": True}),        # refuted (no hoist)
+        ("3_H4", {"H": 4}),
+        ("4_selective_remat", {"remat": "selective"}),
+        ("5_selective_H4", {"remat": "selective", "H": 4}),
+    ]),
+    "jamba": ("jamba-1.5-large-398b", "train_4k", [
+        ("2_expert_ep_constraints", {}),                   # new code default
+        ("3_selective_remat", {"remat": "selective"}),
+        ("4_selective_H4", {"remat": "selective", "H": 4}),
+        ("5_sort_dispatch", {"remat": "selective"}),       # sort-based MoE
+        ("6_sort_no_ep_pin", {"remat": "selective",
+                              "ep_interior": False}),
+        ("7_ep_shard_map", {"remat": "selective", "ep_interior": False,
+                            "ep_shard_map": True}),
+    ]),
+    "qwen3-moe": ("qwen3-moe-235b-a22b", "train_4k", [
+        ("2_expert_ep_constraints", {}),
+        ("3_selective_remat", {"remat": "selective"}),
+        ("4_selective_H4", {"remat": "selective", "H": 4}),
+        ("5_sort_dispatch", {"remat": "selective"}),       # sort-based MoE
+        ("6_sort_no_ep_pin", {"remat": "selective",
+                              "ep_interior": False}),
+        ("7_ep_shard_map", {"remat": "selective", "ep_interior": False,
+                            "ep_shard_map": True}),
+    ]),
+}
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=DOC)
+    p.add_argument("--cell", default=None, choices=list(LADDERS) + [None])
+    p.add_argument("--out", default="results/perf")
+    p.add_argument("--mesh", default="single", choices=("single", "multi"))
+    p.add_argument("--only", default=None,
+                   help="run a single variant label within the ladder")
+    args = p.parse_args()
+
+    mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    os.makedirs(args.out, exist_ok=True)
+    cells = [args.cell] if args.cell else list(LADDERS)
+    for cell in cells:
+        arch, shape, ladder = LADDERS[cell]
+        for label, overrides in ladder:
+            if args.only and label != args.only:
+                continue
+            t0 = time.time()
+            rec = run_cell(arch, shape, mesh, step_overrides=dict(overrides),
+                           verbose=False)
+            rec.update(variant=label, cell=cell, mesh_kind=args.mesh,
+                       overrides={k: str(v) for k, v in overrides.items()})
+            path = os.path.join(args.out, f"{cell}__{label}.json")
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+            if rec["status"] != "ok":
+                print(f"[{cell}/{label}] {rec['status']}: "
+                      f"{rec.get('error', '')[:200]}")
+                continue
+            t = rec["roofline_kernelized"]
+            mem = rec["memory_analysis"]["temp_bytes"] / 1e9
+            print(f"[{cell}/{label}] compile {rec['compile_s']}s  "
+                  f"temp {mem:.1f}GB  compute {t['compute_s']:.2f}s  "
+                  f"memory {t['memory_s']:.2f}s  "
+                  f"collective {t['collective_s']:.2f}s  "
+                  f"dominant={t['dominant']}  mfu={t['mfu_bound']:.3f}",
+                  flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,253 @@
+"""Multi-head attention with the variants needed by the assigned archs.
+
+Supported features (all composable):
+  * grouped-query attention (n_kv_heads < n_heads)
+  * qk-norm (Qwen3)
+  * attention logit soft-capping (Gemma-2)
+  * sliding-window ("local") attention (Gemma-2 alternating layers)
+  * cross-attention (Llama-3.2-Vision image layers, Whisper decoder)
+  * KV-cache single-token decode path
+
+The public entry point dispatches to the Pallas flash-attention kernel
+(`repro.kernels.ops.flash_attention`) when enabled, otherwise to the pure
+jnp reference path below.  Both paths share parameter layout.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .common import (apply_rope, dense_init, rmsnorm_apply, rmsnorm_init,
+                     softcap)
+
+Params = Any
+
+
+@dataclass(frozen=True)
+class AttentionConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int | None = None          # default d_model // n_heads
+    qk_norm: bool = False                # Qwen3
+    attn_softcap: float | None = None    # Gemma-2 (e.g. 50.0)
+    window: int | None = None            # sliding-window size; None = global
+    rope_theta: float = 10000.0
+    causal: bool = True
+    use_bias: bool = False
+    chunk_q: int = 1024                  # query-chunk size (memory bound)
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim if self.head_dim is not None else self.d_model // self.n_heads
+
+
+def attention_init(rng, cfg: AttentionConfig, dtype=jnp.float32) -> Params:
+    hd = cfg.hd
+    ks = jax.random.split(rng, 4)
+    p = {
+        "wq": dense_init(ks[0], cfg.d_model, cfg.n_heads * hd, dtype),
+        "wk": dense_init(ks[1], cfg.d_model, cfg.n_kv_heads * hd, dtype),
+        "wv": dense_init(ks[2], cfg.d_model, cfg.n_kv_heads * hd, dtype),
+        "wo": dense_init(ks[3], cfg.n_heads * hd, cfg.d_model, dtype,
+                         scale=1.0 / (cfg.n_heads * hd) ** 0.5),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(hd, dtype)
+        p["k_norm"] = rmsnorm_init(hd, dtype)
+    return p
+
+
+def _project_qkv(params, cfg: AttentionConfig, x, xkv=None):
+    """x: (B, S, D) -> q (B,S,H,hd), k/v (B,Skv,Hkv,hd)."""
+    hd = cfg.hd
+    xkv = x if xkv is None else xkv
+    B, S, _ = x.shape
+    Skv = xkv.shape[1]
+    q = (x @ params["wq"]).reshape(B, S, cfg.n_heads, hd)
+    k = (xkv @ params["wk"]).reshape(B, Skv, cfg.n_kv_heads, hd)
+    v = (xkv @ params["wv"]).reshape(B, Skv, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rmsnorm_apply(params["q_norm"], q)
+        k = rmsnorm_apply(params["k_norm"], k)
+    return q, k, v
+
+
+def sdpa_reference(q, k, v, *, causal: bool, window: int | None,
+                   logit_cap: float | None, q_positions=None, kv_positions=None):
+    """Pure-jnp scaled dot-product attention with GQA.
+
+    q: (B, S, H, hd); k, v: (B, Skv, Hkv, hd).  Grouped heads are expanded
+    by reshaping q into (Hkv, group) and contracting per kv head.
+    """
+    B, S, H, hd = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    group = H // Hkv
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+
+    qg = q.reshape(B, S, Hkv, group, hd)
+    # logits: (B, Hkv, group, S, Skv)
+    logits = jnp.einsum("bskgh,btkh->bkgst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if logit_cap is not None:
+        logits = softcap(logits, logit_cap)
+
+    if q_positions is None:
+        q_positions = jnp.arange(S)
+    if kv_positions is None:
+        kv_positions = jnp.arange(Skv)
+    qpos = q_positions[:, None]      # (S, 1)
+    kpos = kv_positions[None, :]     # (1, Skv)
+    mask = jnp.ones((S, Skv), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, v.astype(jnp.float32))
+    return out.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def sdpa_chunked(q, k, v, *, causal: bool, window: int | None,
+                 logit_cap: float | None, chunk_q: int = 1024):
+    """Query-chunked attention: numerically identical to sdpa_reference but
+    never materialises the full (S, Skv) score matrix — the scan body is
+    remat'd so peak memory is one chunk's (B, H, cq, Skv) logits.  K/V are
+    expanded to H heads so the head dim stays cleanly shardable under TP
+    (GQA kv counts rarely divide the ``model`` axis; q heads do)."""
+    B, S, H, hd = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    group = H // Hkv
+    kf = jnp.repeat(k, group, axis=2)       # (B, Skv, H, hd)
+    vf = jnp.repeat(v, group, axis=2)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    kv_pos = jnp.arange(Skv)
+
+    @jax.checkpoint
+    def chunk_attn(qc, qpos):
+        logits = jnp.einsum("bqhd,bthd->bhqt", qc.astype(jnp.float32),
+                            kf.astype(jnp.float32)) * scale
+        if logit_cap is not None:
+            logits = softcap(logits, logit_cap)
+        mask = jnp.ones((qc.shape[1], Skv), bool)
+        if causal:
+            mask &= kv_pos[None, :] <= qpos[:, None]
+        if window is not None:
+            mask &= kv_pos[None, :] > qpos[:, None] - window
+        logits = jnp.where(mask[None, None], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bhqt,bthd->bqhd", probs, vf.astype(jnp.float32))
+        return out.astype(q.dtype)
+
+    cq = min(chunk_q, S)
+    n = S // cq
+    rem = S - n * cq
+    pos = jnp.arange(S)
+    xs = (jnp.moveaxis(q[:, :n * cq].reshape(B, n, cq, H, hd), 1, 0),
+          pos[: n * cq].reshape(n, cq))
+    _, ys = jax.lax.scan(lambda c, x: (c, chunk_attn(*x)), None, xs)
+    out = jnp.moveaxis(ys, 0, 1).reshape(B, n * cq, H, hd)
+    if rem:
+        out = jnp.concatenate(
+            [out, chunk_attn(q[:, n * cq:], pos[n * cq:])], axis=1)
+    return out
+
+
+def attention_apply(params: Params, cfg: AttentionConfig, x, *, xkv=None,
+                    positions=None, use_kernel: bool = False,
+                    return_kv: bool = False, parallelism=None):
+    """Full-sequence attention (training / prefill). x: (B, S, D).
+    With return_kv=True also returns the rotated {"k","v"} for cache
+    priming (prefill)."""
+    B, S, _ = x.shape
+    con = parallelism.heads if parallelism is not None else (lambda t: t)
+    q, k, v = _project_qkv(params, cfg, x, xkv)
+    q, k, v = con(q), con(k), con(v)
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    if xkv is None:  # self-attention: RoPE on q and k
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        causal = cfg.causal
+    else:            # cross-attention: no RoPE, no causal mask
+        causal = False
+    if use_kernel:
+        from repro.kernels import ops as kops
+        out = kops.flash_attention(q, k, v, causal=causal, window=cfg.window,
+                                   logit_cap=cfg.attn_softcap)
+    else:
+        out = sdpa_chunked(q, k, v, causal=causal, window=cfg.window,
+                           logit_cap=cfg.attn_softcap, chunk_q=cfg.chunk_q)
+    out = con(out).reshape(B, S, cfg.n_heads * cfg.hd) @ params["wo"]
+    if return_kv:
+        return out, {"k": k, "v": v}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# KV-cache decode path
+# ---------------------------------------------------------------------------
+
+def kv_cache_init(cfg: AttentionConfig, batch: int, max_len: int, dtype=jnp.float32):
+    hd = cfg.hd
+    return {
+        "k": jnp.zeros((batch, max_len, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, hd), dtype),
+    }
+
+
+def attention_decode(params: Params, cfg: AttentionConfig, x, cache, position,
+                     ring: bool = False):
+    """Single-token decode step.
+
+    x: (B, 1, D); cache: {"k","v"}: (B, T, Hkv, hd); position: scalar int —
+    the index of the new token (same for the whole batch; per-request offsets
+    are handled a level above by the serving layer).
+    Returns (out (B, 1, D), new_cache).
+
+    ring=True treats the cache as a ring buffer of length T (sliding-window
+    layers keep only the last ``window`` K/V): the write index is
+    ``position % T`` and slot j holds position p_j = position-((position-j)%T),
+    valid iff p_j >= 0.  RoPE uses absolute positions, so ring slots stay
+    correctly rotated.
+    """
+    B = x.shape[0]
+    T = cache["k"].shape[1]
+    q, k, v = _project_qkv(params, cfg, x)
+    pos = jnp.full((B, 1), position, dtype=jnp.int32)
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    write_idx = position % T if ring else position
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), write_idx, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), write_idx, axis=1)
+
+    kv_positions = jnp.arange(T)
+    if ring:
+        # slot j holds absolute position p_j; valid once written (p_j >= 0);
+        # the ring length IS the window, so no further window mask is needed.
+        p_j = position - jnp.mod(position - kv_positions, T)
+        valid = p_j >= 0
+    else:
+        # valid: kv slot <= current position (and within window if local)
+        valid = kv_positions <= position
+        if cfg.window is not None:
+            valid &= kv_positions > position - cfg.window
+    hd = cfg.hd
+    Hkv = cfg.n_kv_heads
+    group = cfg.n_heads // Hkv
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    qg = q.reshape(B, 1, Hkv, group, hd)
+    logits = jnp.einsum("bskgh,btkh->bkgst", qg.astype(jnp.float32),
+                        ck.astype(jnp.float32)) * scale
+    if cfg.attn_softcap is not None:
+        logits = softcap(logits, cfg.attn_softcap)
+    logits = jnp.where(valid[None, None, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, cv.astype(jnp.float32))
+    out = out.reshape(B, 1, cfg.n_heads * hd).astype(x.dtype) @ params["wo"]
+    return out, {"k": ck, "v": cv}

@@ -1,0 +1,237 @@
+"""CNNs from the paper's own experiments (Table 4): VGG-5 and a
+MobileNetV3-style bottleneck CNN.  Pure JAX, NHWC.
+
+These are the models the faithful reproduction trains (image
+classification task, §5.2); they exercise FedOptima's claim of supporting
+any *sequential* DNN.  The split API mirrors the transformer one: the
+network is a list of layers; the split point is a layer index; the
+auxiliary network is one layer of the same type as the last device layer +
+a dense classifier (§3.2.2).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .common import hardswish
+
+Params = Any
+
+
+def conv_init(rng, kh, kw, cin, cout, dtype=jnp.float32):
+    fan_in = kh * kw * cin
+    return jax.random.normal(rng, (kh, kw, cin, cout), dtype) / math.sqrt(fan_in)
+
+
+def conv2d(x, w, stride=1, groups=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"), feature_group_count=groups)
+
+
+# ---------------------------------------------------------------------------
+# Layer descriptors: each layer is (kind, init_fn, apply_fn) driven by specs
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class CnnConfig:
+    name: str
+    layers: tuple            # tuple of layer spec dicts
+    n_classes: int
+    in_channels: int = 3
+    img_size: int = 32
+
+
+def vgg5_config(n_classes=10, img_size=32) -> CnnConfig:
+    """VGG-5 (Table 4): CONV-3-32, CONV-3-64 x2, FC-128, FC-X."""
+    return CnnConfig(name="vgg5", n_classes=n_classes, img_size=img_size, layers=(
+        {"kind": "conv", "k": 3, "cout": 32, "pool": True},
+        {"kind": "conv", "k": 3, "cout": 64, "pool": True},
+        {"kind": "conv", "k": 3, "cout": 64, "pool": True},
+        {"kind": "flatten"},
+        {"kind": "fc", "dout": 128},
+        {"kind": "fc", "dout": n_classes, "logits": True},
+    ))
+
+
+def mobilenetv3ish_config(n_classes=200, img_size=64) -> CnnConfig:
+    """MobileNetV3-Large-style stack (Table 4, reduced faithfully in shape):
+    stem conv + BNECK residual blocks (expand->depthwise->project, SE
+    omitted for determinism) + head convs + classifier."""
+    bnecks = []
+    plan = [  # (kernel, cout, stride, expand)
+        (3, 16, 1, 1), (3, 24, 2, 4), (3, 24, 1, 3),
+        (5, 40, 2, 3), (5, 40, 1, 3), (5, 40, 1, 3),
+        (3, 80, 2, 6), (3, 80, 1, 2.5), (3, 80, 1, 2.3), (3, 80, 1, 2.3),
+        (3, 112, 1, 6), (3, 112, 1, 6),
+        (5, 160, 2, 6), (5, 160, 1, 6), (5, 160, 1, 6),
+    ]
+    for k, cout, s, e in plan:
+        bnecks.append({"kind": "bneck", "k": k, "cout": cout, "stride": s, "expand": e})
+    return CnnConfig(name="mobilenetv3ish", n_classes=n_classes, img_size=img_size, layers=(
+        {"kind": "conv", "k": 3, "cout": 16, "stride": 2, "act": "hswish"},
+        *bnecks,
+        {"kind": "conv", "k": 1, "cout": 960, "act": "hswish"},
+        {"kind": "gap"},
+        {"kind": "fc", "dout": 1280, "act": "hswish"},
+        {"kind": "fc", "dout": n_classes, "logits": True},
+    ))
+
+
+# ---------------------------------------------------------------------------
+# Init / apply
+# ---------------------------------------------------------------------------
+
+def _layer_init(rng, spec, cin, hw, dtype):
+    """Returns (params, cout, hw_out)."""
+    kind = spec["kind"]
+    if kind == "conv":
+        s = spec.get("stride", 1)
+        p = {"w": conv_init(rng, spec["k"], spec["k"], cin, spec["cout"], dtype),
+             "b": jnp.zeros((spec["cout"],), dtype)}
+        hw = hw // s
+        if spec.get("pool"):
+            hw //= 2
+        return p, spec["cout"], hw
+    if kind == "bneck":
+        ce = int(round(cin * spec["expand"]))
+        k1, k2, k3 = jax.random.split(rng, 3)
+        p = {"w_exp": conv_init(k1, 1, 1, cin, ce, dtype),
+             "w_dw": conv_init(k2, spec["k"], spec["k"], 1, ce, dtype),
+             "w_proj": conv_init(k3, 1, 1, ce, spec["cout"], dtype),
+             "b": jnp.zeros((spec["cout"],), dtype)}
+        return p, spec["cout"], hw // spec.get("stride", 1)
+    if kind == "flatten":
+        return {}, cin * hw * hw, 1
+    if kind == "gap":
+        return {}, cin, 1
+    if kind == "fc":
+        p = {"w": jax.random.normal(rng, (cin, spec["dout"]), dtype) / math.sqrt(cin),
+             "b": jnp.zeros((spec["dout"],), dtype)}
+        return p, spec["dout"], hw
+    raise ValueError(kind)
+
+
+def init_params(rng, cfg: CnnConfig, dtype=jnp.float32) -> list:
+    params, cin, hw = [], cfg.in_channels, cfg.img_size
+    for i, spec in enumerate(cfg.layers):
+        p, cin, hw = _layer_init(jax.random.fold_in(rng, i), spec, cin, hw, dtype)
+        params.append(p)
+    return params
+
+
+def _layer_apply(p, spec, x):
+    kind = spec["kind"]
+    if kind == "conv":
+        x = conv2d(x, p["w"], stride=spec.get("stride", 1)) + p["b"]
+        x = hardswish(x) if spec.get("act") == "hswish" else jax.nn.relu(x)
+        if spec.get("pool"):
+            x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                                      (1, 2, 2, 1), "VALID")
+        return x
+    if kind == "bneck":
+        s = spec.get("stride", 1)
+        h = hardswish(conv2d(x, p["w_exp"]))
+        h = hardswish(conv2d(h, p["w_dw"], stride=s, groups=h.shape[-1]))
+        h = conv2d(h, p["w_proj"]) + p["b"]
+        if s == 1 and x.shape[-1] == h.shape[-1]:
+            h = h + x
+        return h
+    if kind == "flatten":
+        return x.reshape(x.shape[0], -1)
+    if kind == "gap":
+        return jnp.mean(x, axis=(1, 2))
+    if kind == "fc":
+        x = x @ p["w"] + p["b"]
+        if spec.get("logits"):
+            return x
+        return hardswish(x) if spec.get("act") == "hswish" else jax.nn.relu(x)
+    raise ValueError(kind)
+
+
+def forward(params: list, cfg: CnnConfig, x, *, upto: int | None = None,
+            from_layer: int = 0):
+    """Apply layers [from_layer, upto).  Default: whole network -> logits."""
+    hi = len(cfg.layers) if upto is None else upto
+    for i in range(from_layer, hi):
+        x = _layer_apply(params[i], cfg.layers[i], x)
+    return x
+
+
+def ce_loss(logits, labels):
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(lse - gold)
+
+
+def loss_fn(params: list, cfg: CnnConfig, x, labels):
+    return ce_loss(forward(params, cfg, x), labels)
+
+
+def accuracy(params: list, cfg: CnnConfig, x, labels):
+    return jnp.mean((jnp.argmax(forward(params, cfg, x), -1) == labels).astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# FedOptima split API for CNNs
+# ---------------------------------------------------------------------------
+
+def split_params(params: list, l_split: int):
+    return params[:l_split], params[l_split:]
+
+
+def make_aux_params(rng, cfg: CnnConfig, l_split: int,
+                    variant: str = "default", dtype=jnp.float32) -> Params:
+    """Aux network (§3.2.2): layer(s) of the same type as the last device
+    layer + dense classifier.  Variants for the §6.5.1 ablation:
+       default          — one aux layer + classifier
+       classifier_only  — classifier directly on (pooled) activations
+       deep             — two aux layers + classifier
+    """
+    spec = cfg.layers[l_split - 1]
+    ks = jax.random.split(rng, 4)
+    # trace shapes up to the split
+    cin, hw = cfg.in_channels, cfg.img_size
+    for s in cfg.layers[:l_split]:
+        _, cin, hw = _layer_init(jax.random.PRNGKey(0), s, cin, hw, dtype)
+    conv_like = spec["kind"] in ("conv", "bneck")
+    n_layers = {"default": 1, "classifier_only": 0, "deep": 2}[variant]
+    if conv_like:
+        aux_spec = {"kind": "conv", "k": 3, "cout": cin}
+    else:
+        aux_spec = {"kind": "fc", "dout": cin}
+    layers = [_layer_init(ks[i], aux_spec, cin, hw, dtype)[0]
+              for i in range(n_layers)]
+    head = {"w": jax.random.normal(ks[3], (cin, cfg.n_classes), dtype) / math.sqrt(cin),
+            "b": jnp.zeros((cfg.n_classes,), dtype)}
+    params = {"layers": layers, "head": head}
+    spec = {"layer_spec": aux_spec, "pool": conv_like}
+    return params, spec
+
+
+def aux_head_loss(aux_params: Params, spec: dict, acts, labels):
+    h = acts
+    for p in aux_params["layers"]:
+        h = _layer_apply(p, spec["layer_spec"], h)
+    if spec["pool"] and h.ndim == 4:
+        h = jnp.mean(h, axis=(1, 2))
+    logits = h @ aux_params["head"]["w"] + aux_params["head"]["b"]
+    return ce_loss(logits, labels)
+
+
+def device_train_loss(dev_params: list, aux_params: Params, aux_spec: dict,
+                      cfg: CnnConfig, x, labels, l_split: int):
+    acts = forward(dev_params, cfg, x, upto=l_split)
+    return aux_head_loss(aux_params, aux_spec, acts, labels), acts
+
+
+def server_forward_loss(srv_params: list, cfg: CnnConfig, acts, labels,
+                        l_split: int):
+    acts = jax.lax.stop_gradient(acts)
+    logits = forward([None] * l_split + srv_params, cfg, acts, from_layer=l_split)
+    return ce_loss(logits, labels)

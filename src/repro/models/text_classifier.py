@@ -1,0 +1,167 @@
+"""Transformer text classifiers from the paper (Table 4):
+Transformer-6 (EMB-100, ENC-100-5-100 x6, FC-X) and Transformer-12.
+
+Layer-list structure mirroring cnn.py so the FedOptima learners treat CNNs
+and transformers uniformly: layers are ("emb" | "enc" | "pool" | "fc"),
+split points are layer indices, and the aux network is one layer of the
+same type as the last device layer + a dense classifier (§3.2.2).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .attention import AttentionConfig, attention_apply, attention_init
+from .common import dense_init, embed_init, layernorm_apply, layernorm_init
+from .mlp import MlpConfig, mlp_apply, mlp_init
+
+Params = Any
+
+
+@dataclass(frozen=True)
+class TextClassifierConfig:
+    name: str
+    layers: tuple
+    vocab: int
+    n_classes: int
+    seq_len: int
+    d_model: int
+
+
+def transformer6_config(vocab=8000, n_classes=2, seq_len=64, d_model=100,
+                        n_heads=5, d_ff=100, n_layers=6) -> TextClassifierConfig:
+    return TextClassifierConfig(
+        name=f"transformer{n_layers}", vocab=vocab, n_classes=n_classes,
+        seq_len=seq_len, d_model=d_model,
+        layers=({"kind": "emb"},
+                *({"kind": "enc", "heads": n_heads, "d_ff": d_ff},) * n_layers,
+                {"kind": "pool"},
+                {"kind": "fc", "dout": n_classes, "logits": True}))
+
+
+def transformer12_config(vocab=12000, n_classes=2, seq_len=128, d_model=100,
+                         n_heads=50, d_ff=100) -> TextClassifierConfig:
+    return transformer6_config(vocab, n_classes, seq_len, d_model, n_heads,
+                               d_ff, n_layers=12)
+
+
+def _layer_init(rng, spec, cfg: TextClassifierConfig, din, dtype):
+    kind = spec["kind"]
+    if kind == "emb":
+        return {"tok": embed_init(rng, cfg.vocab, cfg.d_model, dtype),
+                "pos": embed_init(jax.random.fold_in(rng, 1), cfg.seq_len,
+                                  cfg.d_model, dtype)}, cfg.d_model
+    if kind == "enc":
+        acfg = AttentionConfig(d_model=cfg.d_model, n_heads=spec["heads"],
+                               n_kv_heads=spec["heads"], causal=False)
+        k1, k2 = jax.random.split(rng)
+        return {"attn": attention_init(k1, acfg, dtype),
+                "ln1": layernorm_init(cfg.d_model, dtype),
+                "mlp": mlp_init(k2, MlpConfig(cfg.d_model, spec["d_ff"], "gelu"), dtype),
+                "ln2": layernorm_init(cfg.d_model, dtype)}, cfg.d_model
+    if kind == "pool":
+        return {}, din
+    if kind == "fc":
+        return {"w": jax.random.normal(rng, (din, spec["dout"]), dtype) / math.sqrt(din),
+                "b": jnp.zeros((spec["dout"],), dtype)}, spec["dout"]
+    raise ValueError(kind)
+
+
+def init_params(rng, cfg: TextClassifierConfig, dtype=jnp.float32) -> list:
+    params, d = [], cfg.d_model
+    for i, spec in enumerate(cfg.layers):
+        p, d = _layer_init(jax.random.fold_in(rng, i), spec, cfg, d, dtype)
+        params.append(p)
+    return params
+
+
+def _layer_apply(p, spec, cfg: TextClassifierConfig, x):
+    kind = spec["kind"]
+    if kind == "emb":
+        S = x.shape[1]
+        return p["tok"][x] + p["pos"][None, :S]
+    if kind == "enc":
+        acfg = AttentionConfig(d_model=cfg.d_model, n_heads=spec["heads"],
+                               n_kv_heads=spec["heads"], causal=False)
+        h = x + attention_apply(p["attn"], acfg, layernorm_apply(p["ln1"], x))
+        return h + mlp_apply(p["mlp"], MlpConfig(cfg.d_model, spec["d_ff"], "gelu"),
+                             layernorm_apply(p["ln2"], h))
+    if kind == "pool":
+        return jnp.mean(x, axis=1)
+    if kind == "fc":
+        return x @ p["w"] + p["b"]
+    raise ValueError(kind)
+
+
+def forward(params: list, cfg: TextClassifierConfig, x, *, upto=None,
+            from_layer: int = 0):
+    hi = len(cfg.layers) if upto is None else upto
+    for i in range(from_layer, hi):
+        x = _layer_apply(params[i], cfg.layers[i], cfg, x)
+    return x
+
+
+def ce_loss(logits, labels):
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(lse - gold)
+
+
+def loss_fn(params, cfg, x, labels):
+    return ce_loss(forward(params, cfg, x), labels)
+
+
+def accuracy(params, cfg, x, labels):
+    return jnp.mean((jnp.argmax(forward(params, cfg, x), -1) == labels).astype(jnp.float32))
+
+
+# --- FedOptima split API (mirrors cnn.py) ---
+
+def split_params(params: list, l_split: int):
+    return params[:l_split], params[l_split:]
+
+
+def make_aux_params(rng, cfg: TextClassifierConfig, l_split: int,
+                    variant: str = "default", dtype=jnp.float32) -> Params:
+    """Aux-network variants for the §6.5.1 ablation:
+       default          — one enc layer + dense classifier
+       classifier_only  — dense classifier only
+       deep             — two enc layers + dense classifier"""
+    spec = {"kind": "enc", "heads": 5 if cfg.d_model % 5 == 0 else 4,
+            "d_ff": cfg.d_model}
+    ks = jax.random.split(rng, 3)
+    layers = []
+    n_enc = {"default": 1, "classifier_only": 0, "deep": 2}[variant]
+    for i in range(n_enc):
+        p, _ = _layer_init(ks[i], spec, cfg, cfg.d_model, dtype)
+        layers.append(p)
+    head = {"w": jax.random.normal(ks[2], (cfg.d_model, cfg.n_classes), dtype)
+            / math.sqrt(cfg.d_model),
+            "b": jnp.zeros((cfg.n_classes,), dtype)}
+    return {"layers": layers, "head": head}, {"layer_spec": spec}
+
+
+def aux_head_loss(aux_params: Params, spec: dict, cfg: TextClassifierConfig,
+                  acts, labels):
+    h = acts
+    for p in aux_params["layers"]:
+        h = _layer_apply(p, spec["layer_spec"], cfg, h)
+    h = jnp.mean(h, axis=1) if h.ndim == 3 else h
+    logits = h @ aux_params["head"]["w"] + aux_params["head"]["b"]
+    return ce_loss(logits, labels)
+
+
+def device_train_loss(dev_params, aux_params, aux_spec, cfg, x, labels, l_split):
+    acts = forward(dev_params, cfg, x, upto=l_split)
+    return aux_head_loss(aux_params, aux_spec, cfg, acts, labels), acts
+
+
+def server_forward_loss(srv_params, cfg, acts, labels, l_split):
+    acts = jax.lax.stop_gradient(acts)
+    logits = forward([None] * l_split + srv_params, cfg, acts, from_layer=l_split)
+    return ce_loss(logits, labels)

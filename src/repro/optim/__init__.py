@@ -1,0 +1,4 @@
+from .optimizers import (OptState, adamw_init, adamw_update, sgd_init,
+                         sgd_update, make_optimizer)
+from .schedule import constant_schedule, cosine_schedule, warmup_cosine
+from .clip import clip_by_global_norm, global_norm

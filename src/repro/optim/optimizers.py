@@ -1,0 +1,86 @@
+"""Optimizers as pure pytree transforms (no optax dependency).
+
+Interface::
+
+    state = <opt>_init(params)
+    params, state = <opt>_update(params, grads, state, lr, ...)
+
+``make_optimizer(name, **hyper)`` returns an (init, update) pair with
+hyperparameters bound; update signature is (params, grads, state, lr).
+Optimizer states inherit the sharding of their parameters (ZeRO-style when
+parameters are sharded over the data axis).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+OptState = Any
+
+
+# ---------------------------------------------------------------------------
+# SGD (+ momentum) — the paper's device/server optimizer
+# ---------------------------------------------------------------------------
+
+def sgd_init(params, momentum: float = 0.0) -> OptState:
+    if momentum == 0.0:
+        return {"step": jnp.zeros((), jnp.int32)}
+    return {"step": jnp.zeros((), jnp.int32),
+            "velocity": jax.tree.map(jnp.zeros_like, params)}
+
+
+def sgd_update(params, grads, state: OptState, lr, momentum: float = 0.0,
+               weight_decay: float = 0.0):
+    if weight_decay:
+        grads = jax.tree.map(lambda g, p: g + weight_decay * p, grads, params)
+    if momentum == 0.0:
+        new_params = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+        return new_params, {"step": state["step"] + 1}
+    vel = jax.tree.map(lambda v, g: momentum * v + g, state["velocity"], grads)
+    new_params = jax.tree.map(lambda p, v: p - lr * v, params, vel)
+    return new_params, {"step": state["step"] + 1, "velocity": vel}
+
+
+# ---------------------------------------------------------------------------
+# AdamW — used for the LM-scale training steps
+# ---------------------------------------------------------------------------
+
+def adamw_init(params) -> OptState:
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "mu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "nu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+    }
+
+
+def adamw_update(params, grads, state: OptState, lr, b1: float = 0.9,
+                 b2: float = 0.95, eps: float = 1e-8, weight_decay: float = 0.1):
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                      state["mu"], grads)
+    nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                      state["nu"], grads)
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    def upd(p, m, v):
+        mhat = m / bc1
+        vhat = v / bc2
+        return (p - lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p)
+                ).astype(p.dtype)
+
+    return jax.tree.map(upd, params, mu, nu), {"step": step, "mu": mu, "nu": nu}
+
+
+def make_optimizer(name: str, **hyper) -> tuple[Callable, Callable]:
+    if name == "sgd":
+        momentum = hyper.pop("momentum", 0.0)
+        return (lambda p: sgd_init(p, momentum),
+                lambda p, g, s, lr: sgd_update(p, g, s, lr, momentum, **hyper))
+    if name == "adamw":
+        return (adamw_init,
+                lambda p, g, s, lr: adamw_update(p, g, s, lr, **hyper))
+    raise ValueError(f"unknown optimizer {name}")

@@ -1,0 +1,2 @@
+from .fault_tolerance import ChurnModel, CheckpointPolicy, resume_or_init
+from .elastic import DeviceInfo, ElasticRegistry

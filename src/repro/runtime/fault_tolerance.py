@@ -1,0 +1,78 @@
+"""Fault tolerance policy: checkpoint/restart + device churn handling.
+
+Two layers of resilience:
+
+1. **FL-native elasticity** (paper §3.4.2): device groups joining/leaving
+   never block training — the simulator and the hybrid step both tolerate
+   any subset of devices being active.  `ChurnModel` reproduces the paper's
+   unstable-environment protocol (§6.4): every `interval` sim-seconds each
+   device drops with probability p and rejoins at the next boundary;
+   bandwidth is re-drawn uniformly from [bw_lo, bw_hi].
+
+2. **Checkpoint/restart** for the server job itself: `CheckpointPolicy`
+   decides when to snapshot (step cadence + wall-clock cadence), and
+   `resume_or_init` restores the latest committed snapshot after a crash.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.checkpoint import store
+
+
+@dataclass
+class ChurnModel:
+    n_devices: int
+    p_drop: float = 0.0
+    interval: float = 600.0          # re-draw every 10 simulated minutes (§6.4)
+    bw_lo: float = 25e6 / 8          # bytes/s (25 Mbps)
+    bw_hi: float = 50e6 / 8
+    seed: int = 0
+
+    def __post_init__(self):
+        self._rng = np.random.default_rng(self.seed)
+
+    def draw(self, t: float):
+        """State for interval starting at time t: (active mask, bandwidths)."""
+        active = self._rng.random(self.n_devices) >= self.p_drop
+        bw = self._rng.uniform(self.bw_lo, self.bw_hi, size=self.n_devices)
+        return active, bw
+
+
+@dataclass
+class CheckpointPolicy:
+    directory: str
+    every_steps: int = 100
+    every_seconds: float = 600.0
+    retain: int = 3
+    _last_step: int = 0
+    _last_time: float = field(default_factory=time.monotonic)
+
+    def should_save(self, step: int) -> bool:
+        now = time.monotonic()
+        due = (step - self._last_step >= self.every_steps or
+               now - self._last_time >= self.every_seconds)
+        return due
+
+    def save(self, step: int, tree, metadata=None):
+        path = store.save(self.directory, step, tree, metadata, self.retain)
+        self._last_step = step
+        self._last_time = time.monotonic()
+        return path
+
+
+def resume_or_init(directory: str, init_fn, like=None):
+    """Restore latest committed snapshot, else build fresh state.
+
+    init_fn() -> state pytree; `like` defaults to init_fn()'s structure.
+    Returns (state, start_step).
+    """
+    step = store.latest_step(directory)
+    template = like if like is not None else init_fn()
+    if step is None:
+        return template, 0
+    state = store.restore(directory, step, template)
+    return state, step

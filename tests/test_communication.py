@@ -1,0 +1,67 @@
+"""Communication volume (paper Fig. 2 + Challenge 1).
+
+FedOptima removes the server->device gradient stream and gates activation
+uploads with flow control; OAFL ships activations AND gradients every
+iteration.  These orderings must hold in the event simulation."""
+import pytest
+
+from repro.core.baselines import simulate_oafl, simulate_splitfed
+from repro.core.simulation import (SimModel, heterogeneous_cluster,
+                                   simulate_fedoptima)
+
+MODEL = SimModel(dev_fwd_flops=1e9, dev_bwd_flops=2e9, full_fwd_flops=5e9,
+                 srv_flops_per_batch=8e9, act_bytes=2e6, dev_model_bytes=4e6,
+                 full_model_bytes=2e7, batch_size=32)
+CLUSTER = heterogeneous_cluster(8)
+TOTAL = 8 * 4096
+
+
+@pytest.fixture(scope="module")
+def comm():
+    fo = simulate_fedoptima(MODEL, CLUSTER, duration=400.0, omega=8)
+    oafl = simulate_oafl(MODEL, CLUSTER, duration=400.0)
+    sf = simulate_splitfed(MODEL, CLUSTER, duration=400.0)
+    return fo, oafl, sf
+
+
+def test_fedoptima_comm_below_oafl(comm):
+    fo, oafl, _ = comm
+    assert fo.comm_per_round(TOTAL) < oafl.comm_per_round(TOTAL)
+
+
+def test_fedoptima_downlink_carries_no_gradients(comm):
+    """Down traffic is only model refreshes — per sample processed it must
+    be far below OAFL's per-sample gradient returns."""
+    fo, oafl, _ = comm
+    fo_down = fo.bytes_down / max(fo.dev_samples, 1)
+    oafl_down = oafl.bytes_down / max(oafl.dev_samples, 1)
+    assert fo_down < 0.5 * oafl_down
+
+
+def test_flow_control_gates_uploads(comm):
+    """With ω=8 and 8 devices the server grants at most one outstanding
+    activation batch per device — uploads per device-iteration < 1."""
+    fo, _, _ = comm
+    iters = fo.dev_samples / MODEL.batch_size
+    uploads = fo.bytes_up / MODEL.act_bytes
+    assert uploads <= iters + 1
+
+
+def test_small_omega_reduces_upload_volume():
+    lo = simulate_fedoptima(MODEL, CLUSTER, duration=300.0, omega=1)
+    hi = simulate_fedoptima(MODEL, CLUSTER, duration=300.0, omega=16)
+    assert lo.bytes_up <= hi.bytes_up
+
+
+def test_agg_compression_ratio():
+    """int8 aggregation payload ≈ 4x smaller than f32 (cross-pod trick)."""
+    import jax.numpy as jnp
+    from repro.parallel.compression import compression_ratio, dequantize, quantize
+    import numpy as np
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(128, 257)),
+                    jnp.float32)
+    codes, scale, n = quantize(x)
+    back = dequantize(codes, scale, n, x.shape)
+    err = float(jnp.abs(back - x).max())
+    assert err < float(jnp.abs(x).max()) / 100    # <1% of range per block
+    assert compression_ratio({"x": x}) < 0.3

@@ -1,0 +1,147 @@
+"""Unit tests for model building blocks (common/attention/mlp/mamba/cnn)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import common
+from repro.models.attention import (AttentionConfig, attention_apply,
+                                    attention_decode, attention_init,
+                                    kv_cache_init)
+from repro.models.mlp import (MlpConfig, MoeConfig, mlp_apply, mlp_init,
+                              moe_apply, moe_apply_grouped, moe_init)
+
+
+def test_rmsnorm_unit_scale():
+    p = common.rmsnorm_init(8)
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 8)) * 10
+    y = common.rmsnorm_apply(p, x)
+    rms = jnp.sqrt(jnp.mean(y ** 2, axis=-1))
+    np.testing.assert_allclose(rms, 1.0, rtol=1e-3)
+
+
+def test_rope_preserves_norm_and_relative_phase():
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 6, 2, 16))
+    pos = jnp.arange(6)[None]
+    y = common.apply_rope(x, pos)
+    np.testing.assert_allclose(jnp.linalg.norm(y, axis=-1),
+                               jnp.linalg.norm(x, axis=-1), rtol=1e-5)
+    # dot(q_i, k_j) depends only on i - j
+    q = common.apply_rope(jnp.ones((1, 8, 1, 16)), jnp.arange(8)[None])
+    d1 = float(jnp.vdot(q[0, 3, 0], q[0, 1, 0]))
+    d2 = float(jnp.vdot(q[0, 6, 0], q[0, 4, 0]))
+    assert abs(d1 - d2) < 1e-4
+
+
+def test_softcap_bounds():
+    x = jnp.linspace(-1000, 1000, 101)
+    y = common.softcap(x, 30.0)
+    assert float(jnp.abs(y).max()) <= 30.0
+    np.testing.assert_allclose(y[50], x[50], atol=1e-3)   # ~identity near 0
+
+
+def test_attention_gqa_head_broadcast():
+    """GQA must equal MHA with kv heads repeated."""
+    cfg_gqa = AttentionConfig(d_model=32, n_heads=4, n_kv_heads=2, head_dim=8)
+    p = attention_init(jax.random.PRNGKey(0), cfg_gqa)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 10, 32))
+    y_gqa = attention_apply(p, cfg_gqa, x)
+    cfg_mha = AttentionConfig(d_model=32, n_heads=4, n_kv_heads=4, head_dim=8)
+    p_mha = dict(p, wk=jnp.concatenate([p["wk"].reshape(32, 2, 8)] * 2, 1
+                                       ).reshape(32, 32),
+                 wv=jnp.concatenate([p["wv"].reshape(32, 2, 8)] * 2, 1
+                                    ).reshape(32, 32))
+    # interleave, not concat: build by repeating each kv head per group
+    wk = p["wk"].reshape(32, 2, 8)
+    wv = p["wv"].reshape(32, 2, 8)
+    p_mha["wk"] = jnp.repeat(wk, 2, axis=1).reshape(32, 32)
+    p_mha["wv"] = jnp.repeat(wv, 2, axis=1).reshape(32, 32)
+    y_mha = attention_apply(p_mha, cfg_mha, x)
+    np.testing.assert_allclose(y_gqa, y_mha, atol=1e-5)
+
+
+def test_attention_decode_matches_full():
+    cfg = AttentionConfig(d_model=32, n_heads=4, n_kv_heads=2, head_dim=8)
+    p = attention_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 7, 32))
+    full = attention_apply(p, cfg, x)
+    cache = kv_cache_init(cfg, 1, 16)
+    for t in range(7):
+        out, cache = attention_decode(p, cfg, x[:, t:t + 1], cache,
+                                      jnp.int32(t))
+    np.testing.assert_allclose(out[:, 0], full[:, -1], atol=1e-5)
+
+
+def test_ring_decode_matches_window_attention():
+    """Ring-buffered sliding-window decode == full local attention."""
+    W = 4
+    cfg = AttentionConfig(d_model=16, n_heads=2, n_kv_heads=2, head_dim=8,
+                          window=W)
+    p = attention_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 10, 16))
+    full = attention_apply(p, cfg, x)
+    cache = kv_cache_init(cfg, 1, W)      # ring cache of exactly W slots
+    for t in range(10):
+        out, cache = attention_decode(p, cfg, x[:, t:t + 1], cache,
+                                      jnp.int32(t), ring=True)
+    np.testing.assert_allclose(out[:, 0], full[:, -1], atol=1e-5)
+
+
+def test_moe_grouped_matches_dense_when_dropless():
+    cfg = MoeConfig(d_model=16, d_ff=32, n_experts=4, top_k=2)
+    p = moe_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 6, 16))
+    y_dense, _ = moe_apply(p, cfg, x)
+    y_grp, _ = moe_apply_grouped(p, cfg, x, capacity_factor=2.0)  # C=T*k/E*2
+    np.testing.assert_allclose(y_dense, y_grp, atol=1e-4)
+
+
+def test_moe_capacity_drops_tokens():
+    cfg = MoeConfig(d_model=8, d_ff=16, n_experts=8, top_k=1)
+    p = moe_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 64, 8))
+    y_lo, _ = moe_apply_grouped(p, cfg, x, capacity_factor=0.25)
+    y_hi, _ = moe_apply_grouped(p, cfg, x, capacity_factor=8.0)
+    # dropping must change some outputs (overflowed tokens contribute 0)
+    assert float(jnp.abs(y_lo - y_hi).max()) > 1e-6
+
+
+def test_moe_load_balance_aux_range():
+    cfg = MoeConfig(d_model=16, d_ff=16, n_experts=8, top_k=2)
+    p = moe_init(jax.random.PRNGKey(2), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, 128, 16))
+    _, aux = moe_apply_grouped(p, cfg, x, capacity_factor=2.0)
+    assert 0.5 < float(aux) < 8.0       # ~1 at uniform routing
+
+
+def test_mlp_gated_vs_gelu_paths():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 3, 8))
+    for act in ("swiglu", "gelu"):
+        cfg = MlpConfig(d_model=8, d_ff=16, activation=act)
+        p = mlp_init(jax.random.PRNGKey(1), cfg)
+        y = mlp_apply(p, cfg, x)
+        assert y.shape == x.shape and bool(jnp.isfinite(y).all())
+
+
+def test_cnn_forward_and_split():
+    from repro.models import cnn
+    cfg = cnn.vgg5_config(n_classes=10, img_size=16)
+    p = cnn.init_params(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 16, 3))
+    logits = cnn.forward(p, cfg, x)
+    assert logits.shape == (2, 10)
+    dev, srv = cnn.split_params(p, 2)
+    acts = cnn.forward(dev, cfg, x, upto=2)
+    loss = cnn.server_forward_loss(srv, cfg, acts,
+                                   jnp.zeros((2,), jnp.int32), 2)
+    assert bool(jnp.isfinite(loss))
+
+
+def test_text_classifier_forward():
+    from repro.models import text_classifier as tc
+    cfg = tc.transformer6_config(vocab=100, n_classes=2, seq_len=16,
+                                 n_layers=2)
+    p = tc.init_params(jax.random.PRNGKey(0), cfg)
+    x = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, 100)
+    logits = tc.forward(p, cfg, x)
+    assert logits.shape == (2, 2)

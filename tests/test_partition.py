@@ -1,0 +1,69 @@
+"""Split-point selection (paper §3.2.1, Eq. 6-8)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import registry
+from repro.core.partition import (cnn_profile, select_split, split_costs,
+                                  transformer_profile)
+
+
+def test_transformer_profile_monotone():
+    cfg = registry.get("smollm-135m")
+    prof = transformer_profile(cfg, seq=128)
+    assert prof.n_units == cfg.n_periods
+    cum = np.cumsum(prof.flops)
+    assert np.all(np.diff(cum) > 0)                 # deeper = more compute
+    assert prof.total_flops >= cum[-1]              # head included
+
+
+def test_eq8_minimax_bruteforce():
+    """select_split must equal the brute-force argmin of Eq. 8."""
+    cfg = registry.get("smollm-135m")
+    prof = transformer_profile(cfg, seq=64)
+    o_k = np.array([1e9, 2e9, 4e9])
+    b_k = np.array([1e6, 5e6, 2e6])
+    l_star = select_split(prof, o_k, b_k)
+    cum = np.cumsum(prof.flops)
+    costs = [max(max(cum[l - 1] / o, prof.out_bytes[l - 1] / b)
+                 for o, b in zip(o_k, b_k))
+             for l in range(1, prof.n_units)]
+    assert l_star == int(np.argmin(costs)) + 1
+
+
+def test_weaker_devices_move_split_earlier():
+    """Slower devices -> compute dominates -> fewer device-side layers."""
+    cfg = registry.get("qwen3-32b")
+    prof = transformer_profile(cfg, seq=128)
+    b_k = np.array([1e9] * 4)
+    weak = select_split(prof, np.array([1e8] * 4), b_k)
+    strong = select_split(prof, np.array([1e13] * 4), b_k)
+    assert weak <= strong
+
+
+@given(st.lists(st.floats(1e8, 1e11), min_size=1, max_size=8),
+       st.lists(st.floats(1e4, 1e9), min_size=1, max_size=8))
+@settings(max_examples=25, deadline=None)
+def test_split_valid_for_any_cluster(os_, bs_):
+    k = min(len(os_), len(bs_))
+    cfg = registry.get("smollm-135m")
+    prof = transformer_profile(cfg, seq=32)
+    o_k, b_k = np.array(os_[:k]), np.array(bs_[:k])
+    l = select_split(prof, o_k, b_k)
+    assert 1 <= l <= prof.n_units - 1
+    c = split_costs(prof, o_k, b_k)
+    assert np.all(np.isfinite(c)) and c.shape == (prof.n_units,)
+
+
+def test_cnn_profile_matches_paper_models():
+    from repro.models.cnn import mobilenetv3ish_config, vgg5_config
+    for cfg in (vgg5_config(), mobilenetv3ish_config()):
+        prof = cnn_profile(cfg)
+        assert prof.n_units == len(cfg.layers)
+        assert prof.total_flops > 0
+        assert all(b >= 0 for b in prof.out_bytes)
+
+
+def test_all_assigned_archs_profile():
+    for name in registry.ARCHS:
+        prof = transformer_profile(registry.get(name), seq=64)
+        assert prof.n_units >= 2 and prof.total_flops > 0

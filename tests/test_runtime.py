@@ -1,0 +1,111 @@
+"""Fault tolerance + elasticity: checkpoint store, churn, elastic registry."""
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import store
+from repro.runtime.elastic import ElasticRegistry
+from repro.runtime.fault_tolerance import ChurnModel
+
+
+# ---------------------------------------------------------------------------
+# checkpoint store
+# ---------------------------------------------------------------------------
+
+def _state(v=0.0):
+    return {"params": {"w": jnp.full((4, 4), v), "b": jnp.zeros((4,))},
+            "step": jnp.asarray(int(v), jnp.int32)}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    d = str(tmp_path)
+    store.save(d, 10, _state(3.0), metadata={"lr": 0.1})
+    out = store.restore(d, 10, _state())
+    np.testing.assert_allclose(out["params"]["w"], 3.0)
+    assert store.restore_metadata(d, 10)["lr"] == 0.1
+
+
+def test_latest_and_retention(tmp_path):
+    d = str(tmp_path)
+    for s in (1, 2, 3, 4, 5):
+        store.save(d, s, _state(float(s)), retain=3)
+    assert store.latest_step(d) == 5
+    assert store.committed_steps(d) == [3, 4, 5]   # older GC'd
+
+
+def test_uncommitted_snapshot_ignored(tmp_path):
+    d = str(tmp_path)
+    store.save(d, 1, _state(1.0))
+    # simulate a crash mid-write: directory without COMMITTED marker
+    os.makedirs(os.path.join(d, "step_00000002"))
+    assert store.latest_step(d) == 1
+    with pytest.raises(FileNotFoundError):
+        store.restore(d, 2, _state())
+
+
+def test_restore_into_shape_dtype_struct(tmp_path):
+    import jax
+    d = str(tmp_path)
+    store.save(d, 7, _state(2.0))
+    like = jax.eval_shape(lambda: _state())
+    out = store.restore(d, 7, like)
+    np.testing.assert_allclose(out["params"]["w"], 2.0)
+
+
+# ---------------------------------------------------------------------------
+# churn model (§6.4 protocol)
+# ---------------------------------------------------------------------------
+
+def test_churn_draw_rates():
+    cm = ChurnModel(n_devices=1000, p_drop=0.3, seed=0)
+    active, bw = cm.draw(0.0)
+    assert 0.6 < active.mean() < 0.8
+    assert np.all((bw >= cm.bw_lo) & (bw <= cm.bw_hi))
+
+
+def test_churn_p_zero_keeps_everyone():
+    cm = ChurnModel(n_devices=64, p_drop=0.0)
+    active, _ = cm.draw(0.0)
+    assert active.all()
+
+
+# ---------------------------------------------------------------------------
+# elastic registry (§3.4.2)
+# ---------------------------------------------------------------------------
+
+def test_join_leave_rejoin():
+    reg = ElasticRegistry()
+    a = reg.join(1e9, 1e6)
+    b = reg.join(2e9, 2e6)
+    assert set(reg.active_ids) == {a, b}
+    reg.leave(a)
+    assert reg.active_ids == [b]
+    reg.rejoin(a, t=5.0)
+    assert set(reg.active_ids) == {a, b}
+
+
+def test_elastic_training_round_never_blocks():
+    """Hybrid-step semantics: a round with dropped groups still advances
+    (agg_weight zero for dropped groups; paper §3.4.2)."""
+    import jax
+    from repro.configs import registry as areg
+    from repro.core import fedopt_step as F
+    from repro.launch.mesh import make_debug_mesh
+
+    arch = areg.smoke_config("smollm-135m")
+    mesh = make_debug_mesh(1, 1)
+    cfg = F.FedStepConfig(arch=arch, l_split=1, n_groups=4, seq_len=16,
+                          per_group_batch=2, H=2)
+    jitted, _, s_spec, _ = F.jit_train_step(cfg, mesh)
+    state = jax.jit(lambda: F.init_train_state(jax.random.PRNGKey(0), cfg),
+                    out_shardings=s_spec)()
+    batch = F.concrete_train_batch(jax.random.PRNGKey(1), cfg)
+    batch["agg_weight"] = jnp.asarray([1.0, 0.0, 0.0, 1.0])  # 2 dropped
+    state, metrics = jitted(state, batch)
+    assert int(state["version"]) == 1
+    assert bool(jnp.isfinite(metrics["d_loss"]))
+    # aggregated global model excludes dropped groups: groups 0 and 3 agree
+    w = state["dev"]["embed"]
+    np.testing.assert_allclose(np.asarray(w[0]), np.asarray(w[1]), atol=1e-6)

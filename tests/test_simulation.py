@@ -1,0 +1,96 @@
+"""Event simulator: idle time, throughput, communication — the paper's
+system-level claims as testable orderings (Fig. 1/2/8-11)."""
+import numpy as np
+import pytest
+
+from repro.core.baselines import REGISTRY
+from repro.core.simulation import (SimModel, heterogeneous_cluster,
+                                   simulate_fedoptima)
+
+MODEL = SimModel(dev_fwd_flops=1e9, dev_bwd_flops=2e9, full_fwd_flops=5e9,
+                 srv_flops_per_batch=8e9, act_bytes=1e6, dev_model_bytes=4e6,
+                 full_model_bytes=2e7, batch_size=32)
+CLUSTER = heterogeneous_cluster(8)
+DUR = 400.0
+
+
+@pytest.fixture(scope="module")
+def results():
+    out = {"fedoptima": simulate_fedoptima(MODEL, CLUSTER, duration=DUR)}
+    for name, fn in REGISTRY.items():
+        out[name] = fn(MODEL, CLUSTER, duration=DUR)
+    return out
+
+
+def test_fedoptima_lowest_device_idle_among_offloading(results):
+    """Fig. 8/9: FedOptima device idle ≤ all offloading baselines."""
+    for base in ("splitfed", "pipar", "oafl"):
+        assert results["fedoptima"].dev_idle_frac <= \
+            results[base].dev_idle_frac + 1e-6
+
+
+def test_fedoptima_lowest_server_idle(results):
+    """Fig. 8/9: server idle lower than every baseline."""
+    for name, m in results.items():
+        if name == "fedoptima":
+            continue
+        assert results["fedoptima"].srv_idle_frac <= m.srv_idle_frac + 1e-6
+
+
+def test_fedoptima_highest_throughput(results):
+    """Fig. 10/11 (Observation 3)."""
+    for name, m in results.items():
+        assert results["fedoptima"].throughput >= m.throughput - 1e-6, name
+
+
+def test_async_beats_sync_on_heterogeneous_devices(results):
+    """Stragglers: FedAsync devices idle less than classic FL's."""
+    assert results["fedasync"].dev_idle_frac < results["fl"].dev_idle_frac
+
+
+def test_pipar_overlap_beats_splitfed(results):
+    assert results["pipar"].throughput >= results["splitfed"].throughput
+
+
+def test_fedoptima_comm_lower_than_oafl(results):
+    """Fig. 2: flow control + no gradient return cut communication."""
+    total = 8 * 4096  # nominal dataset size for per-round normalization
+    fo = results["fedoptima"].comm_per_round(total)
+    oafl = results["oafl"].comm_per_round(total)
+    assert fo < oafl
+
+
+def test_omega_bounds_buffer():
+    """§3.4.1: peak buffered activations never exceed ω."""
+    for omega in (1, 4, 16):
+        m = simulate_fedoptima(MODEL, CLUSTER, duration=DUR, omega=omega)
+        assert m.max_buffered <= omega
+
+
+def test_larger_omega_no_less_server_work():
+    served = [simulate_fedoptima(MODEL, CLUSTER, duration=DUR,
+                                 omega=o).srv_batches for o in (1, 8)]
+    assert served[1] >= served[0]
+
+
+def test_churn_degrades_gracefully():
+    """Fig. 12/13: retention ratio stays high under dropout for FedOptima
+    and collapses for barrier-based SplitFed."""
+    from repro.runtime.fault_tolerance import ChurnModel
+    base = simulate_fedoptima(MODEL, CLUSTER, duration=DUR).throughput
+    churn = ChurnModel(n_devices=8, p_drop=0.3, interval=50.0, seed=1)
+    t = simulate_fedoptima(MODEL, CLUSTER, duration=DUR, churn=churn)
+    retention = t.throughput / base
+    assert retention > 0.4
+
+    from repro.core.baselines import simulate_splitfed
+    sf_base = simulate_splitfed(MODEL, CLUSTER, duration=DUR).throughput
+    churn2 = ChurnModel(n_devices=8, p_drop=0.3, interval=50.0, seed=1)
+    sf = simulate_splitfed(MODEL, CLUSTER, duration=DUR, churn=churn2)
+    assert sf.throughput / max(sf_base, 1e-9) <= retention + 0.05
+
+
+def test_deterministic_given_seed():
+    a = simulate_fedoptima(MODEL, CLUSTER, duration=100.0, seed=3)
+    b = simulate_fedoptima(MODEL, CLUSTER, duration=100.0, seed=3)
+    assert a.dev_samples == b.dev_samples and a.bytes_up == b.bytes_up
