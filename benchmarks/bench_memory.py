@@ -2,18 +2,20 @@
 
 OAFL: μ = (K+1)·μ_model + K·μ_act (a server-side model per device).
 FedOptima: μ = μ_model + ω·μ_act (one model + a global activation cap) —
-verified against the simulator's actual peak buffer occupancy."""
+verified against the integrated ControlPlane's actual peak buffer
+occupancy (the simulator asserts the flow-control cap on every enqueue,
+so Σ|Q_act| ≤ ω holds *during* the run, not just at the end)."""
 from __future__ import annotations
 
 from repro.core.simulation import simulate_fedoptima
 
-from .common import MOBILENET_SPLIT, Row, testbed_b, timed
+from .common import MOBILENET_SPLIT, OMEGA, Row, fedoptima_control, \
+    testbed_b, timed
 from repro.core.simulation import SimCluster
 import numpy as np
 
 MU_MODEL = 22e6       # server-side MobileNetV3 block bytes
 MU_ACT = 3.2e6        # one activation batch
-OMEGA = 8
 
 
 def main() -> list[Row]:
@@ -29,11 +31,14 @@ def main() -> list[Row]:
     for K in (8, 32, 128):
         cluster = SimCluster(dev_flops=np.full(K, 5e9),
                              dev_bw=np.full(K, 100e6 / 8), srv_flops=4e11)
+        cp = fedoptima_control(cluster)
         m, us = timed(simulate_fedoptima, MOBILENET_SPLIT, cluster,
-                      duration=120.0, omega=OMEGA)
+                      duration=120.0, omega=OMEGA, control=cp)
         rows.append(Row(f"memory/K={K}/sim_peak_buffer", us,
-                        f"max_buffered={m.max_buffered};omega={OMEGA}"))
+                        f"max_buffered={m.max_buffered};omega={OMEGA}"
+                        f";cp_peak={cp.peak_buffered}"))
         assert m.max_buffered <= OMEGA
+        assert cp.peak_buffered <= OMEGA and cp.flow.within_cap
     # 8 GB server bound (paper: OAFL caps out at 26 devices)
     k_max_oafl = int((8e9 - MU_MODEL) / (MU_MODEL + MU_ACT))
     rows.append(Row("memory/oafl_max_devices_8GB", 0.0, f"K={k_max_oafl}"))

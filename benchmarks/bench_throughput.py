@@ -4,16 +4,19 @@ from __future__ import annotations
 from repro.core.baselines import REGISTRY
 from repro.core.simulation import simulate_fedoptima
 
-from .common import (MOBILENET_SPLIT, Row, TRANSFORMER12_SPLIT,
-                     TRANSFORMER6_SPLIT, VGG5_SPLIT, testbed_a, testbed_b,
-                     timed)
+from .common import (MOBILENET_SPLIT, OMEGA, Row, TRANSFORMER12_SPLIT,
+                     TRANSFORMER6_SPLIT, VGG5_SPLIT, fedoptima_control,
+                     testbed_a, testbed_b, timed)
 
 DUR = 600.0
 
 
 def run(model, cluster, tag):
     rows = []
-    fo, us = timed(simulate_fedoptima, model, cluster, duration=DUR, omega=8)
+    cp = fedoptima_control(cluster)
+    fo, us = timed(simulate_fedoptima, model, cluster, duration=DUR,
+                   omega=OMEGA, control=cp)
+    assert cp.peak_buffered <= OMEGA
     rows.append(Row(f"throughput/{tag}/fedoptima", us,
                     f"samples_per_s={fo.throughput:.1f}"))
     best = 0.0

@@ -9,7 +9,20 @@ from __future__ import annotations
 import time
 from dataclasses import dataclass
 
+from repro.core.control_plane import ControlPlane
 from repro.core.simulation import SimModel, SimCluster, heterogeneous_cluster
+
+#: The paper's default global activation cap (Eq. 3) used across benchmarks.
+OMEGA = 8
+
+
+def fedoptima_control(cluster: SimCluster, omega: int = OMEGA,
+                      **kw) -> ControlPlane:
+    """The integrated host control plane for a FedOptima simulation run:
+    per-device flow units so Σ_k |Q_k^act| ≤ ω is the strict Eq. 3 cap.
+    Pass as ``simulate_fedoptima(..., control=...)`` and inspect
+    ``peak_buffered`` / ``consumption`` afterwards."""
+    return ControlPlane.for_sim(cluster.K, omega, **kw)
 
 # device-side / server-side per-batch costs for a VGG-5-like split (batch 32)
 VGG5_SPLIT = SimModel(

@@ -1,8 +1,9 @@
 from .partition import (LayerProfile, cnn_profile, transformer_profile,
                         select_split, split_costs)
-from .aggregator import AsyncAggregator, fedasync_update
+from .aggregator import AsyncAggregator, fedasync_update, staleness_weight
 from .scheduler import Message, TaskScheduler
 from .flow_control import FlowController
+from .control_plane import ControlPlane, RoundPlan
 from .simulation import (Metrics, Sim, SimCluster, SimModel,
                          heterogeneous_cluster, simulate_fedoptima)
 from .baselines import (REGISTRY, simulate_classic_fl, simulate_fedasync,

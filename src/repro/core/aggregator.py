@@ -35,11 +35,11 @@ class AsyncAggregator:
 
     def aggregate(self, theta_dk: Any, theta_aux_k: Any, t_k: int) -> bool:
         """Alg. 4 lines 12–19.  Returns True if the update was applied."""
-        staleness = self.version - t_k
-        if staleness > self.max_delay:
+        alpha = staleness_weight(self.version - t_k, self.max_delay,
+                                 self.alpha_power)
+        if alpha == 0.0:
             self.n_rejected += 1
             return False
-        alpha = (1.0 / (staleness + 1.0)) ** self.alpha_power
         self.theta_d = tree_lerp(self.theta_d, theta_dk, alpha)
         self.theta_aux = tree_lerp(self.theta_aux, theta_aux_k, alpha)
         self.version += 1
@@ -49,6 +49,17 @@ class AsyncAggregator:
     def snapshot(self):
         """(θ_d, θ̃_d, t) sent back to a device (Alg. 4 line 20)."""
         return self.theta_d, self.theta_aux, self.version
+
+
+def staleness_weight(staleness: int, max_delay: int = 16,
+                     alpha_power: float = 1.0) -> float:
+    """Alg. 4's per-update weight: α = (staleness + 1)^-alpha_power, or 0
+    when the update is older than the staleness cap D (line 13's skip).
+    Shared by the host-side aggregator, the event simulator, and the
+    control plane that feeds ``agg_weight`` into the jit'd hybrid step."""
+    if staleness > max_delay:
+        return 0.0
+    return (1.0 / (staleness + 1.0)) ** alpha_power
 
 
 def fedasync_update(global_tree, local_tree, staleness, alpha_power: float = 1.0):

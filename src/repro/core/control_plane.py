@@ -1,0 +1,380 @@
+"""Host control plane: Alg. 2–4 driving the jit'd hybrid step.
+
+This module is the bridge between the paper's three host-side algorithms —
+the Task Scheduler (Alg. 2/3, ``scheduler.py``), memory-bounded activation
+flow control (§3.4.1, ``flow_control.py``) and staleness-weighted async
+aggregation (Alg. 4, ``aggregator.py``) — and the datacenter-scale pjit
+program in ``fedopt_step.py``.  The on-mesh step is pure and shape-static;
+everything data-dependent (who may send, which buffered batch the server
+consumes, how stale each group's model is) is planned here on the host and
+shipped into the step as small dense batch fields.
+
+Datacenter mapping
+------------------
+An FL "device" is a *device group* (one dp index of the mesh).  One jit
+step is one round of H micro-iterations.  The activation hand-off is an
+ω-deep ring of **slots**; one slot holds one scheduled activation batch
+(the combined emission of all groups for one micro-iteration — μ_act in
+Eq. 3 is measured at this granularity, so server activation memory is
+exactly ω slots regardless of the number of groups, versus OAFL's K-linear
+growth).  Within a slot, each group's rows are an individually flow-
+controlled contribution: a group needs a sender token to refresh its rows
+(budget ω slots × G rows-groups), and the Task Scheduler's counters track
+per-group server consumption for the Alg. 3 fairness policy.
+
+Per round, :meth:`ControlPlane.plan_round` emits a :class:`RoundPlan`:
+
+    read_slot[h]    slot the server trains on at micro-iteration h —
+                    chosen by the counter policy (argmin consumption over
+                    groups with live contributions, Alg. 3) or FIFO
+    write_slot[h]   slot the devices' emission lands in (a free ring slot)
+    send_mask[h,g]  1 if group g holds a token and ships its rows
+    agg_weight[g]   α_g = (staleness_g + 1)^-alpha_power, 0 beyond the
+                    staleness cap D or for inactive groups (Alg. 4 l.13/16)
+
+Knobs: ``omega`` (ring depth / Eq. 3 cap), ``policy`` ("counter" | "fifo"),
+``max_delay`` (D), ``alpha_power`` (staleness exponent).
+
+The same class also fronts the event simulator (``simulation.py``): there
+the scheduler/flow units are per-device activation batches and the
+simulator drives them in event order; :func:`ControlPlane.for_sim` builds
+that configuration.  Benchmarks assert ``peak_buffered <= omega`` through
+either path.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass
+
+import numpy as np
+
+from .aggregator import staleness_weight
+from .flow_control import FlowController
+from .scheduler import Message, TaskScheduler
+
+
+@dataclass(frozen=True)
+class RoundPlan:
+    """One round's host-planned schedule, consumed by the jit'd step."""
+    read_slot: np.ndarray    # (H,) int32
+    write_slot: np.ndarray   # (H,) int32
+    send_mask: np.ndarray    # (H, G) float32
+    agg_weight: np.ndarray   # (G,) float32
+
+    def batch_fields(self) -> dict:
+        """The plan as jit-step batch fields (see fedopt_step.SCHEDULE_KEYS
+        + ``agg_weight``)."""
+        import jax.numpy as jnp
+        return {"read_slot": jnp.asarray(self.read_slot, jnp.int32),
+                "write_slot": jnp.asarray(self.write_slot, jnp.int32),
+                "send_mask": jnp.asarray(self.send_mask, jnp.float32),
+                "agg_weight": jnp.asarray(self.agg_weight, jnp.float32)}
+
+
+class ControlPlane:
+    """TaskScheduler + FlowController + staleness accounting, round-planned.
+
+    ``unit`` is the flow-control granularity: "group" for the pod path
+    (one unit = one group's rows in a slot; token budget ω·G) and "device"
+    for the event simulator (one unit = one device activation batch;
+    budget ω, the paper's strict Eq. 3 bookkeeping).
+    """
+
+    def __init__(self, n_groups: int, omega: int, H: int = 1, *,
+                 policy: str = "counter", max_delay: int = 16,
+                 alpha_power: float = 1.0, unit: str = "group"):
+        if omega < 1 or n_groups < 1:
+            raise ValueError(
+                f"need omega >= 1 and n_groups >= 1, got omega={omega}, "
+                f"n_groups={n_groups} (ω is the Eq. 3 activation cap)")
+        assert unit in ("group", "device"), unit
+        self.G = n_groups
+        self.omega = omega
+        self.H = H
+        self.max_delay = max_delay
+        self.alpha_power = alpha_power
+        self.scheduler = TaskScheduler(n_groups, policy=policy)
+        budget = omega * n_groups if unit == "group" else omega
+        self.flow = FlowController(omega=budget)
+        for g in range(n_groups):
+            self.flow.register(g)
+        self.versions = np.zeros(n_groups, np.int64)   # t_g
+        self.version = 0                               # t (global model)
+        self.n_accepted = 0
+        self.n_rejected = 0
+        self.peak_buffered = 0        # peak Σ|Q_act| in flow units
+        self.peak_live_slots = 0      # peak occupied ring slots (pod path)
+        self._slot_groups = [set() for _ in range(omega)]
+        self._next_write = 0
+        self._last_read = 0
+
+    @classmethod
+    def for_sim(cls, n_devices: int, omega: int, **kw):
+        """Control plane for the event simulator: per-device flow units so
+        Σ_k |Q_k^act| ≤ ω holds exactly as written in Eq. 3."""
+        return cls(n_devices, omega, unit="device", **kw)
+
+    # ------------------------------------------------------------------
+    # pod path: plan one round of H micro-iterations
+    # ------------------------------------------------------------------
+
+    def plan_round(self, active=None, produce=None, reads=None) -> RoundPlan:
+        """Plan H micro-iterations and commit the bookkeeping.
+
+        active : (G,) bool — groups participating in this round (drive
+            aggregation weights; inactive groups neither send nor count).
+        produce : (H, G) bool — which groups have a fresh emission at each
+            micro-iteration (straggler profile); default: active every h.
+        reads : (H,) bool — micro-iterations at which the server consumes a
+            new scheduled batch; default all (lockstep server).  A False
+            entry re-reads the last consumed slot (the server never idles —
+            Fig. 1(d) — but consumes no new buffered batch).
+
+        The plan is deterministic, and the bookkeeping (scheduler counters,
+        flow tokens, peak buffers) is committed immediately: in the lockstep
+        datacenter mapping the mesh executes exactly this schedule.
+        """
+        G, H = self.G, self.H
+        active = np.ones(G, bool) if active is None else \
+            np.asarray(active, bool)
+        produce = np.tile(active, (H, 1)) if produce is None else \
+            np.asarray(produce, bool) & active[None, :]
+        reads = np.ones(H, bool) if reads is None else np.asarray(reads, bool)
+
+        read_slot = np.zeros(H, np.int32)
+        write_slot = np.zeros(H, np.int32)
+        send_mask = np.zeros((H, G), np.float32)
+
+        for h in range(H):
+            # -- server read first: the mesh consumes the ring state from
+            #    before this micro-iteration's write --
+            read_slot[h] = self._plan_read(consume=bool(reads[h]))
+            # -- then the device emission lands --
+            write_slot[h] = self._plan_write(produce[h], send_mask[h])
+
+        return RoundPlan(read_slot=read_slot, write_slot=write_slot,
+                         send_mask=send_mask,
+                         agg_weight=self.agg_weights(active))
+
+    def _plan_read(self, consume: bool) -> int:
+        """Pick the slot the server trains on (Alg. 3 at slot granularity:
+        the slot containing the least-served group's contribution)."""
+        if not consume or not self.scheduler.has_activation:
+            # cold start or a stalled server tick: replay stale (already
+            # consumed or zero) content — scan for a slot with no live
+            # contributions so unconsumed rows are not trained unaccounted
+            for d in range(self.omega):
+                s = (self._last_read + d) % self.omega
+                if not self._slot_groups[s]:
+                    return s
+            # ring fully live (stall long enough for writes to fill all ω
+            # slots): replay the last consumed position; its rows are also
+            # trained when actually consumed — a bounded pipeline-bubble
+            # duplicate, not a consumption event (counters record Alg. 3
+            # scheduling decisions, not stalled re-processing)
+            return self._last_read
+        msg = self.scheduler.get()           # counter/FIFO policy pick
+        s = msg.content
+        # the mesh consumes the whole slot: dequeue every co-resident
+        # contribution and count it against its group
+        contributors = sorted(self._slot_groups[s])
+        self.scheduler.drain_slot(s, [g for g in contributors
+                                      if g != msg.origin])
+        for g in contributors:
+            self.flow.on_dequeue(g)
+        self._slot_groups[s].clear()
+        self._last_read = s
+        return s
+
+    def _plan_write(self, offer: np.ndarray, mask_row: np.ndarray) -> int:
+        """Allocate a free ring slot and grant sends into it.  When every
+        slot still holds unconsumed contributions (buffer full), nobody
+        sends — the write is a masked no-op on the mesh, which is exactly
+        the ω cap."""
+        w = self._free_slot()
+        if w is None:
+            return int(self._next_write)     # all-zero mask row: no-op write
+        # token-holding offering groups ship their rows, least-served first
+        # (counter order, so scarcity favors underserved groups — Alg. 3)
+        order = sorted(np.flatnonzero(offer),
+                       key=lambda g: (self.scheduler.counters.get(g, 0), g))
+        for g in order:
+            if not self.flow.can_send(g):
+                continue
+            self.flow.mark_sent(g)
+            self.flow.on_enqueue(g)          # lockstep: arrival is immediate
+            self.scheduler.put(Message("activation", int(g), content=w))
+            self._slot_groups[w].add(int(g))
+            mask_row[g] = 1.0
+        if self._slot_groups[w]:
+            self._next_write = (w + 1) % self.omega
+        self.peak_buffered = max(self.peak_buffered, self.flow.buffered)
+        self.peak_live_slots = max(self.peak_live_slots, self.live_slots)
+        return w
+
+    def _free_slot(self) -> int | None:
+        for d in range(self.omega):
+            s = (self._next_write + d) % self.omega
+            if not self._slot_groups[s]:
+                return s
+        return None
+
+    # ------------------------------------------------------------------
+    # staleness-weighted aggregation bookkeeping (Alg. 4)
+    # ------------------------------------------------------------------
+
+    def agg_weights(self, active=None) -> np.ndarray:
+        """Per-group α from real staleness counters (Alg. 4 lines 13/16).
+        May be all-zero (every update rejected as too stale / absent); the
+        on-mesh aggregation treats that as "keep current params", matching
+        Alg. 4's skip."""
+        active = np.ones(self.G, bool) if active is None else \
+            np.asarray(active, bool)
+        return np.array([staleness_weight(self.version - int(self.versions[g]),
+                                          self.max_delay, self.alpha_power)
+                         if active[g] else 0.0 for g in range(self.G)],
+                        np.float32)
+
+    def finish_round(self, active=None):
+        """End-of-round aggregation accounting: in the lockstep mapping all
+        participating groups' models arrive together, so one round = one
+        aggregation event (version +1).  Accepted groups (staleness ≤ D)
+        sync to the new global model; rejected/absent ones drift further
+        (Alg. 4 lines 12–20 telescoped per round)."""
+        active = np.ones(self.G, bool) if active is None else \
+            np.asarray(active, bool)
+        t = self.version
+        accepted = [g for g in np.flatnonzero(active)
+                    if staleness_weight(t - int(self.versions[g]),
+                                        self.max_delay,
+                                        self.alpha_power) > 0.0]
+        self.n_accepted += len(accepted)
+        self.n_rejected += int(active.sum()) - len(accepted)
+        if not accepted:
+            # every update rejected: no aggregation event happened on-mesh
+            # (all-zero weights keep current params), nobody resyncs
+            return
+        self.version = t + 1
+        for g in np.flatnonzero(active):
+            # Alg. 4 line 20: every participant receives the global model
+            # back, so even a rejected (too-stale) group restarts fresh —
+            # its delta was dropped (weight 0), not its membership
+            self.versions[g] = self.version
+
+    # -- event-simulator staleness hooks (per-arrival, version always
+    #    advances: the simulator counts every aggregation event) --
+    def aggregate_arrival(self, k: int, t_k: int) -> float:
+        """One device model arrived (sim path): returns its α (0 =
+        rejected as too stale, Alg. 4 line 13)."""
+        w = staleness_weight(self.version - int(t_k), self.max_delay,
+                             self.alpha_power)
+        if w > 0.0:
+            self.n_accepted += 1
+        else:
+            self.n_rejected += 1
+        self.version += 1
+        return w
+
+    def device_synced(self, k: int):
+        """Device k received the global model back (Alg. 4 line 20)."""
+        self.versions[k] = self.version
+
+    # ------------------------------------------------------------------
+    # introspection / invariants
+    # ------------------------------------------------------------------
+
+    @property
+    def live_slots(self) -> int:
+        return sum(1 for s in self._slot_groups if s)
+
+    @property
+    def consumption(self) -> dict[int, int]:
+        """Per-group server-consumption counters (Alg. 3 state)."""
+        return dict(self.scheduler.counters)
+
+    def consumption_share(self, g: int) -> float:
+        total = sum(self.scheduler.counters.values())
+        return self.scheduler.counters.get(g, 0) / max(total, 1)
+
+    @property
+    def within_cap(self) -> bool:
+        """Σ|Q_act| ≤ ω in flow units AND live ring slots ≤ ω."""
+        return self.flow.within_cap and self.live_slots <= self.omega
+
+    def note_buffered(self, n: int):
+        """Record an externally-observed buffer occupancy (sim path)."""
+        self.peak_buffered = max(self.peak_buffered, n)
+
+    # ------------------------------------------------------------------
+    # checkpointing: the host plan must survive restarts together with the
+    # on-mesh ring it describes, or staleness history and slot occupancy
+    # silently reset on resume
+    # ------------------------------------------------------------------
+
+    def state_dict(self) -> dict:
+        """JSON-able snapshot of the planning state (pod path)."""
+        return {
+            "policy": self.scheduler.policy,
+            "versions": [int(v) for v in self.versions],
+            "version": int(self.version),
+            "counters": {str(k): int(v)
+                         for k, v in self.scheduler.counters.items()},
+            "queues": {str(g): [None if m.content is None else int(m.content)
+                                for m in q]
+                       for g, q in self.scheduler.q_act.items()},
+            "arrival": [int(g) for g in self.scheduler._arrival],
+            "slot_groups": [sorted(s) for s in self._slot_groups],
+            "tokens": {str(g): bool(v)
+                       for g, v in self.flow.sender_active.items()},
+            "rr": [int(g) for g in self.flow._rr],
+            "next_write": int(self._next_write),
+            "last_read": int(self._last_read),
+            "n_accepted": int(self.n_accepted),
+            "n_rejected": int(self.n_rejected),
+            "peak_buffered": int(self.peak_buffered),
+            "peak_live_slots": int(self.peak_live_slots),
+        }
+
+    def load_state_dict(self, sd: dict):
+        """Restore a :meth:`state_dict` snapshot: queue contents (exact
+        order), counters, slot occupancy, staleness versions, and the flow
+        budget implied by the live contributions."""
+        if len(sd["slot_groups"]) != self.omega:
+            raise ValueError(
+                f"snapshot has {len(sd['slot_groups'])} ring slots, "
+                f"this ControlPlane has omega={self.omega}")
+        if sd.get("policy", self.scheduler.policy) != self.scheduler.policy:
+            raise ValueError(
+                f"snapshot was taken under policy={sd['policy']!r}, this "
+                f"ControlPlane uses {self.scheduler.policy!r}; the arrival "
+                "log is policy-specific — resume with the same --policy")
+        self.versions[:] = np.asarray(sd["versions"], np.int64)
+        self.version = sd["version"]
+        self.n_accepted = sd["n_accepted"]
+        self.n_rejected = sd["n_rejected"]
+        self.peak_buffered = sd["peak_buffered"]
+        self.peak_live_slots = sd["peak_live_slots"]
+        self._next_write = sd["next_write"]
+        self._last_read = sd["last_read"]
+        self.scheduler.counters = {int(k): v
+                                   for k, v in sd["counters"].items()}
+        self._slot_groups = [set(gs) for gs in sd["slot_groups"]]
+        # replay queues verbatim and restore the flow controller's exact
+        # token/round-robin state (re-granting from fresh registration
+        # order could arm different groups than the original under a tight
+        # budget, diverging a resumed run from an uninterrupted one)
+        self.scheduler.q_act = {
+            int(g): deque(Message("activation", int(g), content=s)
+                          for s in slots)
+            for g, slots in sd["queues"].items()}
+        self.scheduler._arrival = deque(sd["arrival"])
+        self.flow.inflight_by.clear()
+        self.flow.buffered = sum(len(q) for q in self.scheduler.q_act.values())
+        if "tokens" in sd:
+            self.flow.sender_active = {int(g): v
+                                       for g, v in sd["tokens"].items()}
+            self.flow._rr = [int(g) for g in sd["rr"]]
+        else:   # snapshot predates token serialization: re-grant in the cap
+            for g in list(self.flow.sender_active):
+                self.flow.sender_active[g] = False
+            self.flow._maybe_grant()

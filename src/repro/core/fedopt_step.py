@@ -11,10 +11,27 @@ hand-off).  The server-side block is ONE centrally-trained model (TP over
 ``model``, FSDP over dp) consuming the activation stream.
 
 Idle-time elimination carries over: with ``pipeline_acts=True`` (the
-paper's queue semantics) the server trains on the *previous* step's
-scheduled activations, so the device half and the server half of the XLA
-program have no data dependency — the latency-hiding scheduler overlaps
-them, which is Fig. 1(d) at pod scale.
+paper's queue semantics) the server trains on *previously scheduled*
+activations, so the device half and the server half of the XLA program
+have no data dependency — the latency-hiding scheduler overlaps them,
+which is Fig. 1(d) at pod scale.
+
+The activation hand-off is an ω-deep ring of scheduled batches (Eq. 3's
+bounded buffer realized on-mesh): ``state["act_buf"]`` holds ω slots, each
+one micro-iteration's combined (all-groups) activation batch.  The *host
+control plane* (core/control_plane.py — TaskScheduler + FlowController +
+staleness accounting) plans each round and feeds the jit'd step three
+schedule fields per micro-iteration:
+
+    read_slot[h]    which ring slot the server trains on (Alg. 3's pick)
+    write_slot[h]   which slot this iteration's emission lands in
+    send_mask[h,g]  which groups' rows refresh in that slot (flow-control
+                    token grants; unsent rows keep the slot's old content)
+
+plus per-group ``agg_weight`` derived from real staleness counters
+(Alg. 4 line 16) instead of placeholder ones.  With ω=1, an identity
+schedule, and uniform weights this reduces bit-for-bit to the original
+single-buffer pipeline.
 
 Structure of one hybrid step::
 
@@ -27,6 +44,7 @@ Structure of one hybrid step::
 """
 from __future__ import annotations
 
+import zlib
 from dataclasses import dataclass, field, replace
 from functools import partial
 from typing import Any
@@ -64,6 +82,9 @@ class FedStepConfig:
     param_dtype: Any = jnp.float32
     # --- pipeline/perf options (see EXPERIMENTS.md §Perf) ---
     pipeline_acts: bool = True        # server trains on prev-step activations
+    omega: int = 1                    # activation-ring depth in scheduled
+                                      # batches (Eq. 3 cap ω); slots are
+                                      # read/written per the host schedule
     remat: Any = "selective"          # True | False | "selective" (§Perf it.4:
                                       # save post-TP-collective outputs only)
     act_sharding: str = "seq"         # "seq" (Megatron-SP carries) | "none"
@@ -145,7 +166,7 @@ def init_train_state(rng, cfg: FedStepConfig) -> Params:
     return state
 
 
-def _empty_act_buf(cfg: FedStepConfig) -> Params:
+def _empty_act_slot(cfg: FedStepConfig) -> Params:
     """One scheduled activation batch (one micro-iteration's output)."""
     arch = cfg.arch
     B = cfg.n_groups * cfg.micro_batch
@@ -160,6 +181,13 @@ def _empty_act_buf(cfg: FedStepConfig) -> Params:
     return buf
 
 
+def _empty_act_buf(cfg: FedStepConfig) -> Params:
+    """ω-deep ring of scheduled activation batches: Σ|Q_act| ≤ ω on-mesh."""
+    return jax.tree.map(
+        lambda x: jnp.zeros((cfg.omega,) + x.shape, x.dtype),
+        _empty_act_slot(cfg))
+
+
 def abstract_train_state(cfg: FedStepConfig) -> Params:
     """ShapeDtypeStruct state — no allocation (dry-run path)."""
     return jax.eval_shape(lambda: init_train_state(jax.random.PRNGKey(0), cfg))
@@ -169,33 +197,58 @@ def abstract_train_state(cfg: FedStepConfig) -> Params:
 # Input specs (ShapeDtypeStructs for every model input)
 # ---------------------------------------------------------------------------
 
+#: Host-control-plane fields: per-micro-iteration ring schedule (leading H
+#: axis, NOT per-group) + per-group staleness weights (leading G axis).
+SCHEDULE_KEYS = ("read_slot", "write_slot", "send_mask")
+
+
 def train_input_specs(cfg: FedStepConfig) -> dict:
     """Batch stand-ins: tokens/labels per group per local iteration (one
-    round = H micro-iterations); agg weights from the host control plane
-    (staleness-derived, §Alg. 4 line 16)."""
+    round = H micro-iterations); agg weights + the activation-ring schedule
+    from the host control plane (staleness-derived, §Alg. 4 line 16)."""
     arch = cfg.arch
     G, H, b, S = cfg.n_groups, cfg.H, cfg.micro_batch, cfg.seq_len
     sds = jax.ShapeDtypeStruct
     batch = {"tokens": sds((G, H, b, S), jnp.int32),
              "labels": sds((G, H, b, S), jnp.int32),
-             "agg_weight": sds((G,), jnp.float32)}
+             "agg_weight": sds((G,), jnp.float32),
+             "read_slot": sds((H,), jnp.int32),
+             "write_slot": sds((H,), jnp.int32),
+             "send_mask": sds((H, G), jnp.float32)}
     if arch.frontend_len:
         batch["frontend"] = sds((G, H, b, arch.frontend_len, arch.d_model),
                                 cfg.frontend_dtype)
     return batch
 
 
+def identity_schedule(cfg: FedStepConfig) -> dict:
+    """The uncontrolled default plan: every group sends every iteration and
+    slot h%ω is consumed then overwritten — with ω=1 this is exactly the
+    original single-buffer pipeline."""
+    slots = jnp.arange(cfg.H, dtype=jnp.int32) % max(cfg.omega, 1)
+    return {"read_slot": slots, "write_slot": slots,
+            "send_mask": jnp.ones((cfg.H, cfg.n_groups), jnp.float32)}
+
+
+def _stable_fold(rng, name: str):
+    """fold_in with a process-stable salt (builtin hash() varies with
+    PYTHONHASHSEED, breaking run-to-run benchmark reproducibility)."""
+    return jax.random.fold_in(rng, zlib.crc32(name.encode()) % 97)
+
+
 def concrete_train_batch(rng, cfg: FedStepConfig) -> dict:
     arch = cfg.arch
-    out = {}
+    out = dict(identity_schedule(cfg))
     for k, s in train_input_specs(cfg).items():
-        if s.dtype == jnp.int32:
-            out[k] = jax.random.randint(jax.random.fold_in(rng, hash(k) % 97),
+        if k in out:
+            continue
+        if k == "agg_weight":
+            out[k] = jnp.ones(s.shape, s.dtype)
+        elif s.dtype == jnp.int32:
+            out[k] = jax.random.randint(_stable_fold(rng, k),
                                         s.shape, 0, arch.vocab, jnp.int32)
         else:
-            out[k] = jnp.ones(s.shape, s.dtype) if k == "agg_weight" else \
-                jax.random.normal(jax.random.fold_in(rng, hash(k) % 97),
-                                  s.shape, s.dtype)
+            out[k] = jax.random.normal(_stable_fold(rng, k), s.shape, s.dtype)
     return out
 
 
@@ -227,17 +280,23 @@ def _stacked_specs(params: Params, par: Parallelism) -> Params:
     return jax.tree_util.tree_unflatten(treedef, specs)
 
 
-def _act_buf_specs(buf: Params, par: Parallelism, seq_shard: bool) -> Params:
+def _act_buf_specs(buf: Params, par: Parallelism, seq_shard: bool,
+                   ring: bool = False) -> Params:
+    """Slot-shaped activation specs; ``ring=True`` for the ω-stacked state
+    buffer (leading slot axis replicated, inner dims as one slot)."""
     dp = tuple(par.dp_axes)
     tp = par.tp_axis
     tp_size = par.mesh.shape[tp]
 
     def spec(k, leaf):
-        b = dp if leaf.shape[0] % par.dp_size == 0 else None
-        if leaf.ndim == 3:      # (B, S, D) or (B, F, D)
-            s = tp if (seq_shard and leaf.shape[1] % tp_size == 0) else None
-            return P(b, s, None)
-        return P(b, None)       # (B, S) int labels/tokens
+        shape = leaf.shape[1:] if ring else leaf.shape
+        b = dp if shape[0] % par.dp_size == 0 else None
+        if len(shape) == 3:     # (B, S, D) or (B, F, D)
+            s = tp if (seq_shard and shape[1] % tp_size == 0) else None
+            inner = (b, s, None)
+        else:
+            inner = (b, None)   # (B, S) int labels/tokens
+        return P(None, *inner) if ring else P(*inner)
     return {k: spec(k, v) for k, v in buf.items()}
 
 
@@ -256,7 +315,7 @@ def state_specs(state: Params, cfg: FedStepConfig, par: Parallelism) -> Params:
     specs["srv_opt"] = so
     if "act_buf" in state:
         specs["act_buf"] = _act_buf_specs(state["act_buf"], par,
-                                          cfg.seq_shard_acts)
+                                          cfg.seq_shard_acts, ring=True)
     return specs
 
 
@@ -264,7 +323,11 @@ def batch_specs(cfg: FedStepConfig, par: Parallelism) -> dict:
     dp = tuple(par.dp_axes)
     out = {"tokens": P(dp, None, None, None),
            "labels": P(dp, None, None, None),
-           "agg_weight": P(dp)}
+           "agg_weight": P(dp),
+           # ring schedule: tiny host-planned control tensors, replicated
+           "read_slot": P(None),
+           "write_slot": P(None),
+           "send_mask": P(None, dp)}
     if cfg.arch.frontend_len:
         out["frontend"] = P(dp, None, None, None, None)
     return out
@@ -350,14 +413,17 @@ def make_train_step(cfg: FedStepConfig, par: Parallelism):
         """Async staleness-weighted aggregation over the group axis (Alg. 4
         lines 12-19 telescoped: the sequential α-lerps over one round equal
         a normalized weighted average with per-group staleness weights
-        supplied by the host control plane)."""
-        w = weights / jnp.maximum(jnp.sum(weights), 1e-9)
+        supplied by the host control plane).  All-zero weights mean every
+        update was rejected (too stale / absent — Alg. 4 line 13): the
+        groups keep their current params instead of being zeroed."""
+        w_sum = jnp.sum(weights)
+        w = weights / jnp.maximum(w_sum, 1e-9)
 
         def mean_bcast(x):
             xw = x.astype(jnp.float32) if cfg.agg_compress is False else \
                 _dequant(_quant(x))
             g = jnp.tensordot(w, xw, axes=1).astype(x.dtype)
-            return jnp.broadcast_to(g[None], x.shape)
+            return jnp.where(w_sum > 0, jnp.broadcast_to(g[None], x.shape), x)
 
         return jax.tree.map(mean_bcast, dev_aux)
 
@@ -369,23 +435,51 @@ def make_train_step(cfg: FedStepConfig, par: Parallelism):
                 dev, aux, srv_acc, *rest = carry
             else:
                 dev, aux, srv, srv_opt, *rest = carry
-            buf = rest[0] if cfg.pipeline_acts else None
+            ring = rest[0] if cfg.pipeline_acts else None
+            batch_g = {k: v for k, v in batch_h.items()
+                       if k not in SCHEDULE_KEYS}
 
-            dev, aux, acts, d_loss = jax.vmap(device_half)(dev, aux, batch_h)
+            dev, aux, acts, d_loss = jax.vmap(device_half)(dev, aux, batch_g)
             G, b = acts.shape[0], acts.shape[1]
             new_buf = {"acts": acts.reshape((G * b,) + acts.shape[2:]),
-                       "labels": batch_h["labels"].reshape(G * b, -1)}
+                       "labels": batch_g["labels"].reshape(G * b, -1)}
             if arch.n_decoder_layers:
-                new_buf["tokens"] = batch_h["tokens"].reshape(G * b, -1)
+                new_buf["tokens"] = batch_g["tokens"].reshape(G * b, -1)
             if arch.family == "vlm":
-                new_buf["frontend"] = batch_h["frontend"].reshape(
-                    (G * b,) + batch_h["frontend"].shape[2:])
+                new_buf["frontend"] = batch_g["frontend"].reshape(
+                    (G * b,) + batch_g["frontend"].shape[2:])
             if cfg.seq_shard_acts:
                 spec = _act_buf_specs({"acts": new_buf["acts"]}, par,
                                       True)["acts"]
                 new_buf["acts"] = jax.lax.with_sharding_constraint(
                     new_buf["acts"], NamedSharding(par.mesh, spec))
-            train_buf = buf if cfg.pipeline_acts else new_buf
+
+            if cfg.pipeline_acts:
+                # server consumes the host-scheduled slot (ring state from
+                # BEFORE this iteration's write, matching the control
+                # plane's read-then-write bookkeeping) ...
+                read_slot = batch_h["read_slot"]
+                train_buf = jax.tree.map(
+                    lambda x: jax.lax.dynamic_index_in_dim(
+                        x, read_slot, 0, keepdims=False), ring)
+                # ... while token-holding groups' rows refresh the written
+                # slot; groups without a flow-control grant keep the slot's
+                # previous content (their emission is not shipped)
+                write_slot = batch_h["write_slot"]
+                keep = batch_h["send_mask"] > 0.5            # (G,)
+                rows = jnp.repeat(keep, b)                   # (G*b,) grouped
+                old = jax.tree.map(
+                    lambda x: jax.lax.dynamic_index_in_dim(
+                        x, write_slot, 0, keepdims=False), ring)
+                merged = jax.tree.map(
+                    lambda n, o: jnp.where(
+                        rows.reshape((-1,) + (1,) * (n.ndim - 1)), n, o),
+                    new_buf, old)
+                ring = jax.tree.map(
+                    lambda r, m: jax.lax.dynamic_update_index_in_dim(
+                        r, m, write_slot, 0), ring, merged)
+            else:
+                train_buf = new_buf
 
             if cfg.server_accum:
                 # θ_s loop-invariant: grads accumulate, FSDP gathers hoist
@@ -397,12 +491,13 @@ def make_train_step(cfg: FedStepConfig, par: Parallelism):
                 srv, srv_opt, s_loss = server_half(srv, srv_opt, train_buf)
                 carry = (dev, aux, srv, srv_opt)
             if cfg.pipeline_acts:
-                carry = carry + (new_buf,)
+                carry = carry + (ring,)
             return carry, (jnp.mean(d_loss), s_loss)
 
-        # (G, H, ...) -> scan-major (H, G, ...)
-        xs = {k: jnp.moveaxis(v, 1, 0) for k, v in batch.items()
-              if k != "agg_weight"}
+        # (G, H, ...) -> scan-major (H, G, ...); the schedule fields already
+        # carry H on the leading axis and pass through unchanged
+        xs = {k: v if k in SCHEDULE_KEYS else jnp.moveaxis(v, 1, 0)
+              for k, v in batch.items() if k != "agg_weight"}
         if cfg.server_accum:
             zeros = jax.tree.map(
                 lambda p: jnp.zeros(p.shape, jnp.float32), state["srv"])

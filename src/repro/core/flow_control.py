@@ -18,6 +18,7 @@ agnostic: the event simulator and the datacenter driver both drive it via
 """
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass, field
 
 
@@ -26,8 +27,10 @@ class FlowController:
     omega: int                              # global activation cap ω
     sender_active: dict = field(default_factory=dict)   # device -> bool
     buffered: int = 0                       # Σ_k |Q_k^act| (server view)
-    inflight: int = 0                       # sent-but-not-enqueued
-    grants: list = field(default_factory=list)  # grant log (for tests)
+    inflight_by: dict = field(default_factory=dict)  # device -> in-flight sends
+    # bounded debug log of recent grants (unbounded growth would be the
+    # same leak class as the scheduler's arrival log on long runs)
+    grants: deque = field(default_factory=lambda: deque(maxlen=256))
     _rr: list = field(default_factory=list)     # round-robin order
 
     def register(self, k: int):
@@ -40,9 +43,7 @@ class FlowController:
         self._maybe_grant()
 
     def unregister(self, k: int):
-        self.sender_active.pop(k, None)
-        if k in self._rr:
-            self._rr.remove(k)
+        self.on_device_left(k)
 
     # -- device side --
     def can_send(self, k: int) -> bool:
@@ -52,27 +53,47 @@ class FlowController:
         """Device consumed its token -> becomes an in-flight send."""
         assert self.sender_active.get(k, False), f"device {k} sent without token"
         self.sender_active[k] = False
-        self.inflight += 1
+        self.inflight_by[k] = self.inflight_by.get(k, 0) + 1
+
+    def inflight_of(self, k: int) -> int:
+        return self.inflight_by.get(k, 0)
 
     # -- server side --
-    def on_enqueue(self, k: int):
-        self.inflight = max(0, self.inflight - 1)
+    def on_enqueue(self, k: int) -> bool:
+        """Admit an arriving activation batch.  Returns False for an
+        unaccounted arrival — the sender dropped (its in-flight budget was
+        reclaimed) and the packet landed anyway; the caller must drop it,
+        otherwise the ω cap would be violated retroactively."""
+        n = self.inflight_by.get(k, 0)
+        if n == 0:
+            return False
+        if n == 1:
+            self.inflight_by.pop(k)
+        else:
+            self.inflight_by[k] = n - 1
         self.buffered += 1
         self._maybe_grant()
+        return True
 
     def on_dequeue(self, k: int):
         self.buffered = max(0, self.buffered - 1)
         self._maybe_grant()
 
     def on_device_left(self, k: int):
-        """A device dropped with a token or in-flight send: reclaim."""
-        if self.sender_active.pop(k, None):
-            pass
+        """A device dropped with a token or an in-flight send: reclaim both,
+        so ``promised`` never stays inflated under churn (otherwise grants
+        starve as departed devices permanently eat into ω)."""
+        self.sender_active.pop(k, None)
+        self.inflight_by.pop(k, None)
         if k in self._rr:
             self._rr.remove(k)
         self._maybe_grant()
 
     # -- invariant-preserving grant --
+    @property
+    def inflight(self) -> int:
+        return sum(self.inflight_by.values())
+
     @property
     def active_tokens(self) -> int:
         return sum(1 for v in self.sender_active.values() if v)

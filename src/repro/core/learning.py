@@ -77,6 +77,11 @@ class FedOptimaLearner:
     flow control granted a token (send=True).  The server trains a single
     θ_s on scheduled activation batches; device blocks aggregate per
     FedAsync with staleness cap D.
+
+    ``consumed[k]`` counts the batches the server actually trained on per
+    device — the learner-side mirror of the ControlPlane's TaskScheduler
+    counters (Alg. 3), so fairness claims can be cross-checked against the
+    real training stream.
     """
 
     def __init__(self, adapter: ModelAdapter, datasets: list[DeviceDataset],
@@ -101,6 +106,7 @@ class FedOptimaLearner:
         self.act_queues: list[deque] = [deque(maxlen=max_queue) for _ in range(K)]
         self.srv_steps = 0
         self.dev_steps = 0
+        self.consumed = {k: 0 for k in range(K)}   # server batches per device
 
         l_cap = l_split
 
@@ -139,6 +145,7 @@ class FedOptimaLearner:
         acts, y = self.act_queues[k].popleft()
         self.srv, _ = self._srv_step(self.srv, acts, y)
         self.srv_steps += 1
+        self.consumed[k] = self.consumed.get(k, 0) + 1
 
     def aggregate(self, k: int):
         ok = self.agg.aggregate(self.dev[k], self.aux[k], self.versions[k])

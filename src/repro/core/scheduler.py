@@ -34,15 +34,29 @@ class TaskScheduler:
         self.counters: dict[int, int] = {k: 0 for k in range(n_devices)}
         self._fifo_seq = 0
         self._arrival: deque[int] = deque()   # device order of activation arrivals
+        self._removed: set[int] = set()       # departed, backlog still draining
 
     # -- dynamic device membership (elastic) --
     def add_device(self, k: int):
+        if k in self._removed:                # rejoin starts with fresh history
+            self._removed.discard(k)
+            self.counters[k] = 0
         self.q_act.setdefault(k, deque())
         self.counters.setdefault(k, 0)
 
     def remove_device(self, k: int):
-        # keep already-buffered activations (they still train); stop counters
-        pass
+        """Departure (§3.4.2): buffered activations are kept — they are
+        valid training data and still drain through ``get`` — and while
+        they drain the device keeps competing under its accumulated counter
+        (zeroing it would hand the departed backlog top priority under the
+        argmin policy).  Counter and queue are purged once drained; a
+        rejoin (``add_device``) always restarts with fresh history."""
+        if self.q_act.get(k):
+            self._removed.add(k)
+        else:
+            self.q_act.pop(k, None)
+            self.counters.pop(k, None)
+            self._removed.discard(k)
 
     # -- Alg. 2 --
     def put(self, m: Message):
@@ -51,7 +65,25 @@ class TaskScheduler:
         else:
             self.add_device(m.origin)
             self.q_act[m.origin].append(m)
-            self._arrival.append(m.origin)
+            if self.policy == "fifo":
+                # only the FIFO policy replays arrival order; appending
+                # under the counter policy would grow without bound
+                self._arrival.append(m.origin)
+
+    def _serve(self, k: int) -> Message:
+        """Pop one activation of device k, count it, and fully purge a
+        departed device once its backlog has drained."""
+        msg = self.q_act[k].popleft()
+        if k in self.counters:
+            self.counters[k] += 1
+        self._purge_if_drained(k)
+        return msg
+
+    def _purge_if_drained(self, k: int):
+        if k in self._removed and not self.q_act.get(k):
+            self.q_act.pop(k, None)
+            self.counters.pop(k, None)
+            self._removed.discard(k)
 
     # -- Alg. 3 --
     def get(self) -> Message | None:
@@ -59,19 +91,42 @@ class TaskScheduler:
             return self.q_model.popleft()
         if self.policy == "fifo":
             while self._arrival:
-                k = self._arrival.popleft()
-                if self.q_act[k]:
-                    self.counters[k] += 1
-                    return self.q_act[k].popleft()
+                k = self._arrival.popleft()   # lazily drains stale entries
+                if self.q_act.get(k):
+                    return self._serve(k)
             return None
         # counter policy: argmin_k c_k over devices with pending activations
         pending = [k for k, q in self.q_act.items() if q]
         if not pending:
             return None
-        k = min(pending, key=lambda d: (self.counters[d], d))
-        self.counters[k] += 1
-        # drop stale arrival-order entries lazily
-        return self.q_act[k].popleft()
+        k = min(pending, key=lambda d: (self.counters.get(d, 0), d))
+        return self._serve(k)
+
+    def drain_slot(self, s: Any, groups) -> None:
+        """Datacenter slot-granular consumption: the mesh reads a whole ring
+        slot, so every listed group's buffered contribution to slot ``s``
+        is served in one go — popped, counted, and (under FIFO) its arrival
+        entry retired.  Used by the control plane for co-resident
+        contributions after ``get()`` picked the slot."""
+        for g in groups:
+            q = self.q_act.get(g)
+            if not q:
+                continue
+            for m in list(q):
+                if m.content == s:
+                    q.remove(m)
+                    if g in self.counters:
+                        self.counters[g] += 1
+                    if self.policy == "fifo":
+                        # this is g's oldest live message (earlier arrivals
+                        # are consumed once slot s reaches the front), so
+                        # its entry is g's first in the arrival log
+                        try:
+                            self._arrival.remove(g)
+                        except ValueError:
+                            pass
+                    break
+            self._purge_if_drained(g)
 
     # -- introspection --
     @property

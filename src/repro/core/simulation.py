@@ -19,8 +19,8 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from .flow_control import FlowController
-from .scheduler import Message, TaskScheduler
+from .control_plane import ControlPlane
+from .scheduler import Message
 
 
 # ---------------------------------------------------------------------------
@@ -135,7 +135,8 @@ class Metrics:
 def simulate_fedoptima(model: SimModel, cluster: SimCluster, *,
                        duration: float, omega: int = 8, H: int = 10,
                        max_delay: int = 16, policy: str = "counter",
-                       hooks=None, churn=None, seed: int = 0) -> Metrics:
+                       hooks=None, churn=None, seed: int = 0,
+                       control: ControlPlane | None = None) -> Metrics:
     """Event simulation of FedOptima.
 
     hooks (optional): object with callbacks driving real training:
@@ -144,22 +145,36 @@ def simulate_fedoptima(model: SimModel, cluster: SimCluster, *,
         server_train(k) -> None              (server consumes one batch of k)
         aggregate(k) -> None                 (async aggregation of device k)
     churn (optional): ChurnModel — devices drop/rejoin, bandwidth re-drawn.
+    control (optional): a ControlPlane supplying the scheduler, flow
+        controller and staleness accounting; by default one is built with
+        per-device flow units (Eq. 3: Σ_k |Q_k^act| ≤ ω strict).  Passing
+        it in lets callers inspect peak buffers / counters afterwards.
     """
     sim = Sim()
     K = cluster.K
     m = Metrics(K=K, duration=duration)
-    sched = TaskScheduler(K, policy=policy)
-    flow = FlowController(omega=omega)
+    if control is not None and \
+            (control.G, control.omega, control.flow.omega,
+             control.scheduler.policy, control.max_delay) != \
+            (K, omega, omega, policy, max_delay):
+        raise ValueError(
+            f"supplied ControlPlane (n={control.G}, omega={control.omega}, "
+            f"flow budget={control.flow.omega}, "
+            f"policy={control.scheduler.policy!r}, "
+            f"max_delay={control.max_delay}) disagrees with the run "
+            f"(n={K}, omega={omega}, policy={policy!r}, "
+            f"max_delay={max_delay}); build it with ControlPlane.for_sim "
+            "so the flow budget is the strict per-device Eq. 3 cap")
+    cp = control if control is not None else \
+        ControlPlane.for_sim(K, omega, policy=policy, max_delay=max_delay)
+    sched = cp.scheduler
+    flow = cp.flow
     rng = np.random.default_rng(seed)
 
     active = np.ones(K, bool)
     bw = cluster.dev_bw.astype(float).copy()
-    versions = np.zeros(K, int)       # local model version t_k
-    global_version = [0]
+    versions = cp.versions            # local model version t_k
     srv_state = {"busy": False}
-
-    for k in range(K):
-        flow.register(k)
 
     t_iter = [(model.dev_fwd_flops + model.dev_bwd_flops) / cluster.dev_flops[k]
               for k in range(K)]
@@ -201,10 +216,16 @@ def simulate_fedoptima(model: SimModel, cluster: SimCluster, *,
         if not active[k]:
             flow.on_device_left(k)
             return
+        if not flow.on_enqueue(k):
+            # zombie packet: the sender dropped (its in-flight budget was
+            # reclaimed) and rejoined before this arrival — reject it so
+            # the ω cap stays strict
+            return
         sched.put(Message("activation", k, size_bytes=model.act_bytes,
                           enqueued_at=sim.t))
-        flow.on_enqueue(k)
         m.max_buffered = max(m.max_buffered, sched.total_buffered)
+        cp.note_buffered(sched.total_buffered)
+        assert flow.within_cap, "flow-control cap violated in simulation"
         kick_server()
 
     def model_arrive(k):
@@ -230,10 +251,8 @@ def simulate_fedoptima(model: SimModel, cluster: SimCluster, *,
     def server_agg_done(k, start):
         m.srv_busy += sim.t - start
         m.aggregations += 1
-        staleness = global_version[0] - versions[k]
-        if staleness <= max_delay and hooks:
+        if cp.aggregate_arrival(k, versions[k]) > 0.0 and hooks:
             hooks.aggregate(k)
-        global_version[0] += 1
         # return global model to device (Alg. 4 l.20)
         tx = model.dev_model_bytes / bw[k] if active[k] else 0.0
         m.bytes_down += model.dev_model_bytes if active[k] else 0.0
@@ -242,7 +261,7 @@ def simulate_fedoptima(model: SimModel, cluster: SimCluster, *,
         kick_server()
 
     def model_return(k):
-        versions[k] = global_version[0]
+        cp.device_synced(k)
         if active[k]:
             device_start_round(k, H)
 
@@ -268,6 +287,9 @@ def simulate_fedoptima(model: SimModel, cluster: SimCluster, *,
                 device_start_round(k, H)
             if was and not act[k]:
                 flow.on_device_left(k)
+                # purge the consumption counter (§3.4.2: a rejoin starts
+                # with fresh history); buffered activations still train
+                sched.remove_device(k)
         sim.after(churn.interval, churn_tick, idx + 1)
 
     # ---------------- go ----------------

@@ -5,7 +5,11 @@ Two modes:
 ``--mode pod``   — the datacenter hybrid step (core/fedopt_step) on a local
                    mesh: every FL device group trains its device-side block
                    on its own non-IID synthetic shard; the server block
-                   trains centrally on the activation stream.  Supports
+                   trains centrally on the activation stream.  Each round is
+                   planned by the host ControlPlane (core/control_plane):
+                   the ω-deep activation ring schedule (--omega), flow-
+                   control send masks, and staleness-derived aggregation
+                   weights all come from real Alg. 2-4 state.  Supports
                    checkpoint/restart (atomic store), elastic group dropout
                    (--p-drop) with staleness-weighted aggregation, and any
                    ``--arch`` at its smoke reduction (--full uses the real
@@ -33,6 +37,7 @@ import numpy as np
 from repro.checkpoint import store
 from repro.configs import registry
 from repro.core import fedopt_step as F
+from repro.core.control_plane import ControlPlane
 from repro.data.partitioner import dirichlet_partition
 from repro.data.synthetic import lm_dataset
 from repro.launch.mesh import make_debug_mesh, n_groups_of
@@ -53,7 +58,9 @@ def _group_streams(cfg: F.FedStepConfig, seed: int = 0):
 
 
 def _make_batch(cfg: F.FedStepConfig, streams, rng: np.random.Generator,
-                active: np.ndarray):
+                plan):
+    """One round's inputs: per-group token shards + the ControlPlane's
+    schedule/weight fields (ring slots, send masks, staleness weights)."""
     G, H, b, S = cfg.n_groups, cfg.H, cfg.micro_batch, cfg.seq_len
     tokens = np.zeros((G, H, b, S), np.int32)
     labels = np.zeros((G, H, b, S), np.int32)
@@ -65,8 +72,8 @@ def _make_batch(cfg: F.FedStepConfig, streams, rng: np.random.Generator,
                 j = idx[h, i]
                 tokens[g, h, i] = streams[g][j:j + S]
                 labels[g, h, i] = streams[g][j + 1:j + S + 1]
-    batch = {"tokens": jnp.asarray(tokens), "labels": jnp.asarray(labels),
-             "agg_weight": jnp.asarray(active.astype(np.float32))}
+    batch = {"tokens": jnp.asarray(tokens), "labels": jnp.asarray(labels)}
+    batch.update(plan.batch_fields())
     arch = cfg.arch
     if arch.frontend_len:
         batch["frontend"] = jnp.zeros(
@@ -79,12 +86,17 @@ def run_pod(args) -> dict:
         else registry.get(args.arch)
     mesh = make_debug_mesh(args.mesh_data, args.mesh_model)
     G = n_groups_of(mesh) * args.groups_per_shard
+    # control-plane knobs default for programmatic callers' bare Namespaces
+    omega = getattr(args, "omega", 1)
     cfg = F.FedStepConfig(
         arch=arch, l_split=args.l_split or F.default_l_split(arch),
         n_groups=G, seq_len=args.seq_len, per_group_batch=args.batch,
         H=args.H, lr_d=args.lr_d, lr_s=args.lr_s,
-        server_opt=args.server_opt)
+        server_opt=args.server_opt, omega=omega)
     jitted, _, s_spec, _ = F.jit_train_step(cfg, mesh, donate=True)
+    cplane = ControlPlane(G, omega, cfg.H,
+                          policy=getattr(args, "policy", "counter"),
+                          max_delay=getattr(args, "max_delay", 16))
 
     start_round = 0
     if args.ckpt_dir and store.latest_step(args.ckpt_dir) is not None:
@@ -92,6 +104,18 @@ def run_pod(args) -> dict:
         like = jax.eval_shape(lambda: F.init_train_state(
             jax.random.PRNGKey(args.seed), cfg))
         state = store.restore(args.ckpt_dir, start_round, like)
+        if "act_buf" in state:
+            ring = jax.tree.leaves(state["act_buf"])[0].shape[0]
+            if ring != omega:
+                raise ValueError(
+                    f"checkpoint has an ω={ring} activation ring but "
+                    f"--omega={omega}; out-of-range slot indices would be "
+                    f"silently clamped — restart with --omega {ring}")
+        meta = store.restore_metadata(args.ckpt_dir, start_round)
+        if "control_plane" in meta:
+            # restore the host plan with the ring it describes, or slot
+            # occupancy and staleness history silently reset on resume
+            cplane.load_state_dict(meta["control_plane"])
         state = jax.device_put(state, s_spec)
         print(f"resumed from round {start_round}")
     else:
@@ -106,8 +130,11 @@ def run_pod(args) -> dict:
         active = (rng.random(G) >= args.p_drop).astype(np.float32)
         if active.sum() == 0:
             active[rng.integers(0, G)] = 1.0
-        batch = _make_batch(cfg, streams, rng, active)
+        plan = cplane.plan_round(active=active.astype(bool))
+        batch = _make_batch(cfg, streams, rng, plan)
         state, metrics = jitted(state, batch)
+        cplane.finish_round(active=active.astype(bool))
+        assert cplane.within_cap, "activation cap ω violated"
         m = {k: float(v) for k, v in metrics.items()}
         history.append(m)
         if (r + 1) % args.log_every == 0:
@@ -120,7 +147,8 @@ def run_pod(args) -> dict:
         if args.ckpt_dir and (r + 1) % args.ckpt_every == 0:
             host_state = jax.tree.map(np.asarray, state)
             store.save(args.ckpt_dir, r + 1, host_state,
-                       metadata={"round": r + 1, "arch": arch.name})
+                       metadata={"round": r + 1, "arch": arch.name,
+                                 "control_plane": cplane.state_dict()})
     return {"history": history, "final": history[-1] if history else None}
 
 
@@ -178,6 +206,12 @@ def main() -> None:
     p.add_argument("--lr-d", type=float, default=0.05)
     p.add_argument("--lr-s", type=float, default=0.05)
     p.add_argument("--server-opt", default="sgd", choices=("sgd", "adamw"))
+    p.add_argument("--omega", type=int, default=1,
+                   help="activation ring depth ω (scheduled batches, Eq. 3)")
+    p.add_argument("--policy", default="counter", choices=("counter", "fifo"),
+                   help="Task Scheduler consumption policy (Alg. 3)")
+    p.add_argument("--max-delay", type=int, default=16,
+                   help="staleness cap D for aggregation (Alg. 4)")
     p.add_argument("--mesh-data", type=int, default=1)
     p.add_argument("--mesh-model", type=int, default=1)
     p.add_argument("--groups-per-shard", type=int, default=4)

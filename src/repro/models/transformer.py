@@ -170,9 +170,10 @@ def _moe_dispatch(p, cfg: ArchConfig, x, parallelism):
             psum_axis=parallelism.tp_axis)
         return y, aux
 
-    y, aux = jax.shard_map(
+    from repro.parallel.sharding import shard_map
+    y, aux = shard_map(
         local_moe, mesh=mesh, in_specs=(expert_spec, dp_spec),
-        out_specs=(dp_spec, P()), check_vma=False)(p, x)
+        out_specs=(dp_spec, P()))(p, x)
     return y, aux
 
 

@@ -1,0 +1,86 @@
+"""Seeded property-check shim: a drop-in subset of `hypothesis`.
+
+Test modules import ``given`` / ``settings`` / ``strategies`` from here.
+When the real `hypothesis` package is installed we re-export it verbatim;
+otherwise a tiny deterministic fallback runs each property test over
+``max_examples`` seeded draws (seed = crc32 of the test's qualified name),
+so `PYTHONPATH=src python -m pytest` collects and passes with zero
+third-party plugins beyond pytest.
+
+Only the strategy combinators the suite uses are implemented:
+integers, floats, booleans, sampled_from, lists, tuples.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies  # noqa: F401
+
+except ImportError:
+    import zlib
+    from types import SimpleNamespace
+
+    import numpy as np
+
+    class _Strategy:
+        def __init__(self, draw_fn):
+            self._draw = draw_fn
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+    def _integers(lo, hi):
+        return _Strategy(lambda r: int(r.integers(lo, hi + 1)))
+
+    def _floats(lo, hi):
+        return _Strategy(lambda r: float(r.uniform(lo, hi)))
+
+    def _booleans():
+        return _Strategy(lambda r: bool(r.integers(0, 2)))
+
+    def _sampled_from(seq):
+        items = list(seq)
+        return _Strategy(lambda r: items[int(r.integers(len(items)))])
+
+    def _lists(elem, *, min_size=0, max_size=10):
+        def draw(r):
+            n = int(r.integers(min_size, max_size + 1))
+            return [elem.draw(r) for _ in range(n)]
+        return _Strategy(draw)
+
+    def _tuples(*elems):
+        return _Strategy(lambda r: tuple(e.draw(r) for e in elems))
+
+    strategies = SimpleNamespace(
+        integers=_integers, floats=_floats, booleans=_booleans,
+        sampled_from=_sampled_from, lists=_lists, tuples=_tuples)
+
+    def settings(max_examples=20, **_ignored):
+        def deco(fn):
+            fn._pc_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strats):
+        def deco(fn):
+            def runner():
+                # read at call time so @settings works above OR below @given
+                n_examples = getattr(fn, "_pc_max_examples",
+                                     getattr(runner, "_pc_max_examples", 20))
+                seed = zlib.crc32(f"{fn.__module__}::{fn.__name__}".encode())
+                for i in range(n_examples):
+                    rng = np.random.default_rng((seed, i))
+                    args = [s.draw(rng) for s in strats]
+                    try:
+                        fn(*args)
+                    except Exception as e:  # pragma: no cover - repro aid
+                        e.args = (f"{e.args[0] if e.args else ''} "
+                                  f"[propcheck example {i}: {args!r}]",)
+                        raise
+
+            # no functools.wraps: pytest must see a zero-arg signature,
+            # and __wrapped__ would leak the property arguments as fixtures
+            runner.__name__ = fn.__name__
+            runner.__doc__ = fn.__doc__
+            runner.__module__ = fn.__module__
+            return runner
+        return deco

@@ -1,0 +1,237 @@
+"""ControlPlane (Alg. 2-4 host side) ↔ jit'd hybrid step round trip:
+identity-plan equivalence, ω-cap invariants, counter-policy fairness,
+staleness-derived aggregation weights."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.core import fedopt_step as F
+from repro.core.control_plane import ControlPlane
+from repro.launch.mesh import make_debug_mesh
+
+
+def _setup(omega=1, n_groups=2, H=2, **kw):
+    a = registry.smoke_config("smollm-135m")
+    cfg = F.FedStepConfig(arch=a, l_split=1, n_groups=n_groups, seq_len=16,
+                          per_group_batch=2 * H, H=H, omega=omega, **kw)
+    mesh = make_debug_mesh(1, 1)
+    jitted, _, s_spec, _ = F.jit_train_step(cfg, mesh, donate=False)
+    state = jax.jit(lambda: F.init_train_state(jax.random.PRNGKey(0), cfg),
+                    out_shardings=s_spec)()
+    return cfg, jitted, state
+
+
+# ---------------------------------------------------------------------------
+# plan → jit round trip
+# ---------------------------------------------------------------------------
+
+def test_identity_plan_matches_default_schedule():
+    """With every group active and ω=1, the planned schedule IS the
+    uncontrolled identity schedule (seed pipeline semantics)."""
+    cfg, _, _ = _setup(omega=1, n_groups=2, H=4)
+    cp = ControlPlane(2, 1, 4)
+    plan = cp.plan_round()
+    ident = F.identity_schedule(cfg)
+    np.testing.assert_array_equal(plan.read_slot, np.asarray(ident["read_slot"]))
+    np.testing.assert_array_equal(plan.write_slot,
+                                  np.asarray(ident["write_slot"]))
+    np.testing.assert_array_equal(plan.send_mask,
+                                  np.asarray(ident["send_mask"]))
+    np.testing.assert_array_equal(plan.agg_weight, np.ones(2, np.float32))
+
+
+def test_roundtrip_bitforbit_vs_seed_path():
+    """The jit'd step driven by ControlPlane-planned batches reproduces the
+    uncontrolled (identity-schedule, uniform-weight) losses bit-for-bit
+    when ω=1 and all groups are active."""
+    cfg, step, state_a = _setup(omega=1, n_groups=2, H=2)
+    state_b = jax.tree.map(jnp.copy, state_a)
+    cp = ControlPlane(cfg.n_groups, cfg.omega, cfg.H)
+    for r in range(3):
+        batch = F.concrete_train_batch(jax.random.PRNGKey(r), cfg)
+        planned = dict(batch)
+        planned.update(cp.plan_round().batch_fields())
+        state_a, ma = step(state_a, batch)        # identity default
+        state_b, mb = step(state_b, planned)      # control-plane derived
+        cp.finish_round()
+        assert float(ma["d_loss"]) == float(mb["d_loss"])
+        assert float(ma["s_loss"]) == float(mb["s_loss"])
+    for la, lb in zip(jax.tree.leaves(state_a), jax.tree.leaves(state_b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_roundtrip_deep_ring_trains():
+    """ω=4: the step consumes a genuinely multi-slot schedule (reads lag
+    writes by the ring depth) and stays finite; the cap invariant holds."""
+    cfg, step, state = _setup(omega=4, n_groups=2, H=4)
+    cp = ControlPlane(cfg.n_groups, cfg.omega, cfg.H)
+    for r in range(3):
+        plan = cp.plan_round()
+        assert cp.within_cap
+        batch = F.concrete_train_batch(jax.random.PRNGKey(r), cfg)
+        batch.update(plan.batch_fields())
+        state, m = step(state, batch)
+        cp.finish_round()
+        assert np.isfinite(float(m["d_loss"]))
+        assert np.isfinite(float(m["s_loss"]))
+    assert cp.peak_live_slots <= cfg.omega
+    assert int(state["version"]) == 3
+
+
+def test_straggler_agg_weights_reweight_on_mesh():
+    """A group inactive for r rounds returns with α=1/(r+1): the jit'd step
+    consumes the staleness-derived weight (not placeholder ones)."""
+    cfg, step, state = _setup(omega=1, n_groups=2, H=2)
+    cp = ControlPlane(cfg.n_groups, cfg.omega, cfg.H)
+    profiles = [np.array([True, True]), np.array([True, False]),
+                np.array([True, False]), np.array([True, True])]
+    for r, active in enumerate(profiles):
+        plan = cp.plan_round(active=active)
+        batch = F.concrete_train_batch(jax.random.PRNGKey(r), cfg)
+        batch.update(plan.batch_fields())
+        state, m = step(state, batch)
+        cp.finish_round(active=active)
+        assert np.isfinite(float(m["d_loss"]))
+    # round 3: group 1 was absent rounds 1-2 -> staleness 2 -> α = 1/3
+    np.testing.assert_allclose(plan.agg_weight, [1.0, 1.0 / 3.0], rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# host-side invariants: ω cap + fairness
+# ---------------------------------------------------------------------------
+
+def _drive(policy, rounds=40, G=2, omega=2, H=8):
+    """Straggler workload with a slow server: group 0 offers every
+    micro-iteration, group 1 every 4th; the server consumes on alternate
+    iterations, so a backlog forms and the scheduling policy matters."""
+    cp = ControlPlane(G, omega, H, policy=policy)
+    produce = np.zeros((H, G), bool)
+    produce[:, 0] = True
+    produce[::4, 1] = True
+    reads = np.arange(H) % 2 == 0
+    sent = np.zeros(G, int)
+    for _ in range(rounds):
+        plan = cp.plan_round(produce=produce, reads=reads)
+        assert cp.within_cap
+        assert cp.live_slots <= omega
+        sent += plan.send_mask.sum(axis=0).astype(int)
+    return cp, sent
+
+
+def test_straggler_consumption_bounded_by_counter_policy():
+    cp, sent = _drive("counter")
+    consumed = cp.consumption
+    total = sum(consumed.values())
+    assert total > 0
+    # the fast group's server share never exceeds what it shipped, and the
+    # slow group's contributions are all eventually consumed (no backlog
+    # starvation: at most ω slots of it can still be in flight)
+    assert consumed[0] <= sent[0]
+    assert consumed[1] >= sent[1] - cp.omega
+    # fairness: under the counter policy the slow group's share is at least
+    # its send share (the policy prefers underserved groups)
+    assert consumed[1] / total >= sent[1] / sent.sum() - 1e-9
+
+
+def test_counter_policy_serves_slow_group_at_least_as_much_as_fifo():
+    cp_c, _ = _drive("counter")
+    cp_f, _ = _drive("fifo")
+    assert cp_c.consumption[1] >= cp_f.consumption.get(1, 0)
+
+
+def test_full_ring_gates_sends():
+    """With the server never reading, at most ω slots' worth of sends are
+    granted, then send masks go to zero (Eq. 3 as a strict invariant)."""
+    G, omega, H = 2, 2, 8
+    cp = ControlPlane(G, omega, H)
+    plan = cp.plan_round(reads=np.zeros(H, bool))
+    granted_iters = (plan.send_mask.sum(axis=1) > 0).sum()
+    assert granted_iters == omega          # one slot per micro-iteration
+    assert plan.send_mask[omega:].sum() == 0
+    assert cp.live_slots == omega and cp.within_cap
+    # next round: still nothing consumed, nothing more may ship
+    plan2 = cp.plan_round(reads=np.zeros(H, bool))
+    assert plan2.send_mask.sum() == 0
+
+
+def test_all_rejected_round_keeps_params():
+    """All-zero agg weights (every update too stale) must keep the current
+    params on-mesh — Alg. 4's skip — not zero the model."""
+    cfg, step, state = _setup(omega=1, n_groups=2, H=2)
+    batch = F.concrete_train_batch(jax.random.PRNGKey(0), cfg)
+    batch["agg_weight"] = jnp.zeros(2, jnp.float32)
+    state, m = step(state, batch)
+    assert np.isfinite(float(m["d_loss"]))
+    leaves = [np.asarray(l) for l in jax.tree.leaves(state["dev"])]
+    # params not zeroed, and the groups stayed diverged (a weighted-mean
+    # broadcast — even of zeros — would have made them identical)
+    assert all(np.all(np.isfinite(l)) for l in leaves)
+    assert any(np.abs(l).max() > 0 for l in leaves)
+    assert any(np.abs(l[0] - l[1]).max() > 1e-7 for l in leaves)
+
+
+def test_state_dict_roundtrip_preserves_plan():
+    """Checkpoint/resume: a restored ControlPlane plans identically to the
+    original (slot occupancy, queue order, flow tokens, counters and
+    staleness all survive), under both scheduling policies."""
+    import json
+    produce = np.array([[True, True, False], [True, False, True],
+                        [True, True, True], [False, True, False]])
+    reads = np.array([True, False, True, False])
+    for policy in ("counter", "fifo"):
+        cp = ControlPlane(3, 2, 4, policy=policy)
+        for _ in range(3):
+            cp.plan_round(produce=produce, reads=reads)
+            cp.finish_round(active=np.array([True, False, True]))
+        sd = cp.state_dict()
+        json.dumps(sd)                             # checkpoint-metadata safe
+        cp2 = ControlPlane(3, 2, 4, policy=policy)
+        cp2.load_state_dict(sd)
+        assert cp2.within_cap
+        for _ in range(3):                         # stays in lockstep
+            p1 = cp.plan_round(produce=produce, reads=reads)
+            p2 = cp2.plan_round(produce=produce, reads=reads)
+            np.testing.assert_array_equal(p1.read_slot, p2.read_slot)
+            np.testing.assert_array_equal(p1.write_slot, p2.write_slot)
+            np.testing.assert_array_equal(p1.send_mask, p2.send_mask)
+            np.testing.assert_array_equal(p1.agg_weight, p2.agg_weight)
+            assert cp.consumption == cp2.consumption
+
+
+def test_load_state_dict_rejects_policy_mismatch():
+    import pytest
+    cp = ControlPlane(2, 2, 4, policy="counter")
+    cp.plan_round()
+    sd = cp.state_dict()
+    cp2 = ControlPlane(2, 2, 4, policy="fifo")
+    with pytest.raises(ValueError, match="policy"):
+        cp2.load_state_dict(sd)
+
+
+def test_sim_rejects_mismatched_control_omega():
+    import pytest
+    from repro.core.simulation import SimModel, SimCluster, simulate_fedoptima
+    model = SimModel(dev_fwd_flops=1e9, dev_bwd_flops=2e9, full_fwd_flops=4e9,
+                     srv_flops_per_batch=6e9, act_bytes=1e6,
+                     dev_model_bytes=1e6, full_model_bytes=4e6, batch_size=32)
+    cluster = SimCluster(dev_flops=np.full(4, 5e9), dev_bw=np.full(4, 1e7),
+                         srv_flops=1e11)
+    with pytest.raises(ValueError, match="disagrees"):
+        simulate_fedoptima(model, cluster, duration=10.0, omega=4,
+                           control=ControlPlane.for_sim(4, 8))
+
+
+def test_staleness_cap_rejects_then_readmits():
+    cp = ControlPlane(2, 1, 2, max_delay=3)
+    active = np.array([True, False])
+    for _ in range(6):                     # group 1 absent 6 rounds > D=3
+        cp.plan_round(active=active)
+        cp.finish_round(active=active)
+    w = cp.agg_weights(np.array([True, True]))
+    assert w[1] == 0.0                     # too stale: Alg. 4 line 13 skip
+    cp.finish_round(np.array([True, True]))
+    assert cp.n_rejected >= 1
+    # after the rejected round the group restarts fresh (Alg. 4 line 20)
+    np.testing.assert_allclose(cp.agg_weights(np.array([True, True])),
+                               [1.0, 1.0])

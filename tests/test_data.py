@@ -1,7 +1,7 @@
 """Data pipeline: Dirichlet non-IID partitioning (§5.2), restartable
 iterators, synthetic dataset learnability structure."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _propcheck import given, settings, strategies as st
 
 from repro.data.partitioner import dirichlet_partition, partition_stats
 from repro.data.pipeline import DeviceDataset

@@ -86,6 +86,38 @@ def test_agg_weights_reweight_contributions():
     assert bool(jnp.isfinite(jax.tree.leaves(state["dev"])[0]).all())
 
 
+BATCH_DIGEST_SNIPPET = r"""
+import zlib
+import jax, numpy as np
+from repro.configs import registry
+from repro.core import fedopt_step as F
+
+arch = registry.smoke_config("smollm-135m")
+cfg = F.FedStepConfig(arch=arch, l_split=1, n_groups=2, seq_len=16,
+                      per_group_batch=4, H=2)
+batch = F.concrete_train_batch(jax.random.PRNGKey(0), cfg)
+digest = 0
+for k in sorted(batch):
+    digest = zlib.crc32(np.ascontiguousarray(batch[k]).tobytes(), digest)
+print("DIGEST", digest)
+"""
+
+
+def test_concrete_batch_deterministic_across_processes():
+    """Regression: seeding with builtin hash() made synthetic batches vary
+    per process via PYTHONHASHSEED, breaking benchmark reproducibility."""
+    import os
+    digests = []
+    for hashseed in ("0", "12345"):
+        env = dict(os.environ, PYTHONPATH="src", PYTHONHASHSEED=hashseed)
+        out = subprocess.run(
+            [sys.executable, "-c", BATCH_DIGEST_SNIPPET],
+            capture_output=True, text=True, timeout=300, env=env)
+        assert "DIGEST" in out.stdout, out.stderr[-2000:]
+        digests.append(out.stdout.strip())
+    assert digests[0] == digests[1], digests
+
+
 MULTIDEV_SNIPPET = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -114,7 +146,10 @@ print("MULTIDEV_OK", float(metrics["d_loss"]), float(metrics["s_loss"]))
 def test_multipod_spmd_runs_in_subprocess():
     """The multi-pod mesh path executes (not just compiles) on 8 forced
     host devices — MoE arch to exercise expert sharding + all collectives."""
+    import os
+    env = dict(os.environ, PYTHONPATH="src")
+    env.pop("XLA_FLAGS", None)     # the snippet sets its own device count
     out = subprocess.run([sys.executable, "-c", MULTIDEV_SNIPPET],
                          capture_output=True, text=True, timeout=900,
-                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+                         env=env)
     assert "MULTIDEV_OK" in out.stdout, out.stderr[-3000:]

@@ -1,7 +1,7 @@
 """Activation flow control (paper §3.4.1): the global cap ω is a strict
 invariant — buffered + in-flight + granted tokens never exceed ω."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _propcheck import given, settings, strategies as st
 
 from repro.core.flow_control import FlowController
 
@@ -81,6 +81,29 @@ def test_cap_invariant_under_any_event_order(events, omega):
         assert fc.buffered <= omega, "buffer exceeded the global cap"
         assert fc.promised <= omega, "cap not strict (tokens over-granted)"
         assert fc.active_tokens >= 0 and fc.inflight >= 0
+
+
+def test_churn_reclaims_inflight_sends():
+    """Regression: a device dropping with an in-flight send must not leave
+    ``promised`` permanently inflated (grants would starve as departed
+    devices eat into ω)."""
+    fc = FlowController(omega=2)
+    for k in range(4):
+        fc.register(k)
+    senders = [k for k in range(4) if fc.can_send(k)]
+    for k in senders:
+        fc.mark_sent(k)                    # both tokens now in flight
+    assert fc.inflight == 2
+    for k in senders:
+        fc.on_device_left(k)               # drop with sends still in flight
+    assert fc.inflight == 0
+    assert fc.promised == fc.buffered + fc.active_tokens
+    # the reclaimed budget is re-granted to surviving devices
+    assert fc.active_tokens == 2
+    assert all(fc.can_send(k) for k in range(4) if k not in senders)
+    # a zombie arrival from a departed device is rejected, keeping the cap
+    assert fc.on_enqueue(senders[0]) is False
+    assert fc.buffered == 0 and fc.within_cap
 
 
 def test_memory_eq3_vs_eq2():

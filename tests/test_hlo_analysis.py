@@ -44,8 +44,10 @@ def test_while_trip_count_scaling():
     cost = analyze_compiled(c)
     expect = n * 2 * 8 * d * d
     assert abs(cost.flops - expect) / expect < 0.01
-    xla = c.cost_analysis()["flops"]
-    assert xla < cost.flops / 2          # XLA undercounts (body once)
+    xla = c.cost_analysis()
+    if isinstance(xla, (list, tuple)):   # jax 0.4.x: one dict per device
+        xla = xla[0]
+    assert xla["flops"] < cost.flops / 2  # XLA undercounts (body once)
 
 
 def test_nested_scan_scaling():

@@ -2,7 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _propcheck import given, settings, strategies as st
 
 from repro.optim.clip import clip_by_global_norm
 from repro.optim.optimizers import (adamw_init, adamw_update, make_optimizer,

@@ -1,6 +1,6 @@
 """Split-point selection (paper §3.2.1, Eq. 6-8)."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _propcheck import given, settings, strategies as st
 
 from repro.configs import registry
 from repro.core.partition import (cnn_profile, select_split, split_costs,

@@ -1,0 +1,31 @@
+"""The plugin-free property-check shim (tests/_propcheck.py) honors
+max_examples for both decorator orders, like hypothesis."""
+import importlib.util
+
+from _propcheck import given, settings, strategies as st
+
+SHIM_ACTIVE = importlib.util.find_spec("hypothesis") is None
+
+_below = []
+_above = []
+
+
+@given(st.integers(0, 5))
+@settings(max_examples=7, deadline=None)
+def test_settings_below_given(x):
+    _below.append(x)
+    assert 0 <= x <= 5
+
+
+@settings(max_examples=7, deadline=None)
+@given(st.integers(0, 5))
+def test_settings_above_given(x):
+    _above.append(x)
+    assert 0 <= x <= 5
+
+
+def test_example_counts():
+    if SHIM_ACTIVE:
+        assert len(_below) == 7 and len(_above) == 7
+    else:          # real hypothesis chooses its own example schedule
+        assert _below and _above

@@ -1,6 +1,6 @@
 """Task Scheduler (paper Alg. 2-3): queues, model priority, counter balance."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _propcheck import given, settings, strategies as st
 
 from repro.core.scheduler import Message, TaskScheduler
 
@@ -86,6 +86,57 @@ def test_scheduler_never_loses_messages(events):
         n_got += 1
     assert n_got == n_put
     assert sum(s.counters.values()) == sum(1 for k, m in events if not m)
+
+
+def test_arrival_log_bounded_under_counter_policy():
+    """Regression: the counter policy never drains the FIFO arrival log, so
+    appending to it unconditionally grows memory without bound — ironic for
+    the memory-management paper."""
+    s = TaskScheduler(2)
+    for t in range(500):
+        s.put(_act(t % 2))
+        s.get()
+    assert len(s._arrival) == 0
+    f = TaskScheduler(2, policy="fifo")
+    for t in range(500):
+        f.put(_act(t % 2))
+        f.get()
+    assert len(f._arrival) <= 1            # lazily drained
+
+
+def test_remove_device_purges_after_drain_keeps_buffered():
+    """remove_device (Alg. 2/3 under churn): already-buffered activations
+    still drain through get() — ranked under the device's accumulated
+    counter, so the departed backlog cannot jump ahead of live underserved
+    devices — and counter+queue are purged once drained."""
+    s = TaskScheduler(2)
+    for _ in range(3):
+        s.put(_act(0))
+    s.put(_act(1))
+    assert s.get().origin == 0             # counters: {0: 1, 1: 0}
+    s.remove_device(0)                     # 2 buffered leftovers remain
+    # fairness survives departure: live device 1 (counter 0) served first
+    assert s.get().origin == 1
+    assert [s.get().origin for _ in range(2)] == [0, 0]   # leftovers train
+    assert s.get() is None
+    assert 0 not in s.q_act                # drained queue dropped
+    assert 0 not in s.counters             # ...and counter purged with it
+    # rejoin starts with fresh history
+    s.add_device(0)
+    assert s.counters[0] == 0
+
+
+def test_remove_device_rejoin_before_drain_resets_history():
+    s = TaskScheduler(2)
+    for _ in range(4):
+        s.put(_act(0))
+        s.get()
+    assert s.counters[0] == 4
+    s.put(_act(0))
+    s.remove_device(0)                     # backlog of 1 keeps counter 4
+    s.add_device(0)                        # rejoin: fresh history
+    assert s.counters[0] == 0
+    assert s.buffered(0) == 1              # backlog survived the bounce
 
 
 def test_elastic_add_device_mid_run():
