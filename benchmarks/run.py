@@ -9,7 +9,7 @@ from __future__ import annotations
 import sys
 
 from . import (bench_ablation_aux, bench_ablation_sched, bench_accuracy,
-               bench_communication, bench_idle, bench_memory,
+               bench_communication, bench_idle, bench_kernels, bench_memory,
                bench_partition, bench_resilience, bench_roofline,
                bench_throughput)
 
@@ -24,6 +24,7 @@ SUITES = {
     "ablation_sched": bench_ablation_sched, # Fig. 15
     "partition": bench_partition,           # Eq. 6-8
     "roofline": bench_roofline,             # §Roofline (deliverable g)
+    "kernels": bench_kernels,               # Pallas fwd/bwd vs references
 }
 
 

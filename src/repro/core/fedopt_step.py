@@ -89,6 +89,11 @@ class FedStepConfig:
                                       # save post-TP-collective outputs only)
     act_sharding: str = "seq"         # "seq" (Megatron-SP carries) | "none"
     use_kernel: bool = False          # Pallas kernels for attn/SSD hot spots
+                                      # (differentiable: custom_vjp backward
+                                      # kernels, so both halves' value_and_grad
+                                      # run through the fused path; composes
+                                      # with remat="selective", which saves
+                                      # the kernels' (o, lse)/state residuals)
     agg_compress: bool = False        # int8 aggregation payload (cross-pod)
     # Server gradient accumulation: apply the server optimizer once per
     # round (grads summed over the H scheduled batches) instead of per

@@ -11,9 +11,11 @@ import jax.numpy as jnp
 
 
 def flash_attention_reference(q, k, v, *, causal=True, window=None,
-                              logit_cap=None):
+                              logit_cap=None, return_lse=False):
     """q: (B, S, H, hd); k, v: (B, Skv, Hkv, hd) with H % Hkv == 0.
-    Returns (B, S, H, hd).  f32 softmax, input dtype out."""
+    Returns (B, S, H, hd).  f32 softmax, input dtype out.  With
+    ``return_lse=True`` also returns the per-row logsumexp (B, H, S) —
+    the oracle for the kernel's backward residual."""
     B, S, H, hd = q.shape
     Skv, Hkv = k.shape[1], k.shape[2]
     group = H // Hkv
@@ -33,7 +35,11 @@ def flash_attention_reference(q, k, v, *, causal=True, window=None,
     probs = jax.nn.softmax(logits, axis=-1)
     probs = jnp.where(jnp.isnan(probs), 0.0, probs)  # fully-masked rows
     out = jnp.einsum("bkgst,btkh->bskgh", probs, v.astype(jnp.float32))
-    return out.reshape(B, S, H, hd).astype(q.dtype)
+    out = out.reshape(B, S, H, hd).astype(q.dtype)
+    if return_lse:
+        lse = jax.nn.logsumexp(logits, axis=-1)           # (B, Hkv, g, S)
+        return out, lse.reshape(B, H, S)
+    return out
 
 
 def ssd_reference(x, dt, A, B, C, initial_state=None):

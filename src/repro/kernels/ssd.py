@@ -12,6 +12,15 @@ carried across chunks — this replaces the GPU implementation's separate
 state-passing kernel + inter-block sync.  All matmuls are (Q×N)(N×P)-style
 MXU shapes; Q, N, P default to 128/128/64.
 
+Backward: the forward also emits each chunk's *entry* state h_{c-1}
+(an (nc, N, P) residual per batch × head — the linear-recurrence analogue
+of flash attention's LSE), and the backward kernel walks the chunks in
+REVERSE grid order carrying dh (the gradient of the carried state) in VMEM
+scratch, recomputing the decay/score tiles per chunk to produce
+dx/ddt/dA/dB/dC.  dB/dC come out per *head* and are group-summed to the
+(B, T, G, N) layout by the JAX wrapper; dA accumulates per (batch, head)
+in scratch and is reduced outside.
+
 Layouts: x (B, T, H, P); dt (B, T, H); A (H,); Bm/Cm (B, T, G, N);
 out (B, T, H, P).  T % Q == 0 (ops.py pads).
 """
@@ -25,7 +34,22 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, h_scr, *,
+def _chunk_tiles(dt, a, Bm, Cm, *, chunk: int):
+    """Shared forward recomputation: log-decay cumsum and the masked decay /
+    score tiles every term of the chunk algebra is built from."""
+    la = dt * a                                        # log-decay per step, <= 0
+    Lcum = jnp.cumsum(la)                              # (Q,)
+    Ltot = Lcum[-1]
+    scores = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # (Q, Q)
+    diff = Lcum[:, None] - Lcum[None, :]               # L_t - L_s
+    tri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    decay = jnp.where(tri, jnp.exp(diff), 0.0)
+    return la, Lcum, Ltot, scores, decay, tri
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, st_ref, h_scr, *,
                 chunk: int):
     c_idx = pl.program_id(2)
 
@@ -39,24 +63,17 @@ def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, h_scr, *,
     Bm = b_ref[0, :, 0, :].astype(jnp.float32)         # (Q, N)
     Cm = c_ref[0, :, 0, :].astype(jnp.float32)         # (Q, N)
 
-    la = dt * a                                        # log-decay per step, <= 0
-    Lcum = jnp.cumsum(la)                              # (Q,)
-    Ltot = Lcum[-1]
+    _, Lcum, Ltot, scores, decay, _ = _chunk_tiles(dt, a, Bm, Cm, chunk=chunk)
 
     xb = x * dt[:, None]                               # dt-weighted input (Q, P)
 
     # intra-chunk quadratic term
-    scores = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
-                                 preferred_element_type=jnp.float32)  # (Q, Q)
-    diff = Lcum[:, None] - Lcum[None, :]               # L_t - L_s
-    tri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
-        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
-    decay = jnp.where(tri, jnp.exp(diff), 0.0)
     y_intra = jax.lax.dot_general(scores * decay, xb, (((1,), (0,)), ((), ())),
                                   preferred_element_type=jnp.float32)
 
     # inter-chunk contribution from carried state
     h_prev = h_scr[...]                                # (N, P)
+    st_ref[0, 0, 0] = h_prev                           # backward residual
     y_inter = jax.lax.dot_general(Cm * jnp.exp(Lcum)[:, None], h_prev,
                                   (((1,), (0,)), ((), ())),
                                   preferred_element_type=jnp.float32)
@@ -70,9 +87,11 @@ def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, h_scr, *,
     y_ref[0, :, 0, :] = (y_intra + y_inter).astype(y_ref.dtype)
 
 
-def ssd_chunked_pallas(x, dt, A, Bm, Cm, *, chunk=128, interpret=False):
+def ssd_fwd_chunked_pallas(x, dt, A, Bm, Cm, *, chunk=128, interpret=False):
     """x: (B, T, H, P); dt: (B, T, H); A: (H,); Bm, Cm: (B, T, G, N).
-    Returns y (B, T, H, P).  T must be divisible by chunk (ops.py pads)."""
+    Returns (y (B, T, H, P), states (B, H, nc, N, P)) where states[..., c]
+    is the carried state *entering* chunk c.  T % chunk == 0 (ops.py pads).
+    """
     Bb, T, H, P = x.shape
     G, N = Bm.shape[2], Bm.shape[3]
     assert T % chunk == 0, (T, chunk)
@@ -81,7 +100,7 @@ def ssd_chunked_pallas(x, dt, A, Bm, Cm, *, chunk=128, interpret=False):
     grid = (Bb, H, nc)
 
     kernel = functools.partial(_ssd_kernel, chunk=chunk)
-    return pl.pallas_call(
+    y, states = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
@@ -93,8 +112,161 @@ def ssd_chunked_pallas(x, dt, A, Bm, Cm, *, chunk=128, interpret=False):
             pl.BlockSpec((1, chunk, 1, N),
                          lambda b, h, c, r=rep: (b, c, h // r, 0)),
         ],
-        out_specs=pl.BlockSpec((1, chunk, 1, P), lambda b, h, c: (b, c, h, 0)),
-        out_shape=jax.ShapeDtypeStruct((Bb, T, H, P), x.dtype),
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, 1, 1, N, P), lambda b, h, c: (b, h, c, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bb, T, H, P), x.dtype),
+            jax.ShapeDtypeStruct((Bb, H, nc, N, P), jnp.float32),
+        ],
         scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
         interpret=interpret,
     )(x, dt, A.astype(jnp.float32), Bm, Cm)
+    return y, states
+
+
+def ssd_chunked_pallas(x, dt, A, Bm, Cm, *, chunk=128, interpret=False):
+    """Forward-only wrapper returning y (B, T, H, P)."""
+    y, _ = ssd_fwd_chunked_pallas(x, dt, A, Bm, Cm, chunk=chunk,
+                                  interpret=interpret)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Backward (reverse chunk scan carrying dh in VMEM)
+# ---------------------------------------------------------------------------
+
+def _ssd_bwd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, st_ref, dy_ref,
+                    dx_ref, ddt_ref, db_ref, dc_ref, da_ref,
+                    dh_scr, da_scr, *, chunk: int):
+    """One reverse grid step = one chunk.  dh_scr carries ∂L/∂h_c from the
+    chunks *after* this one (the reverse of the forward's VMEM state carry);
+    da_scr accumulates the per-(batch, head) scalar ∂L/∂A over all chunks."""
+    c_idx = pl.program_id(2)        # 0 == LAST chunk (index maps reverse)
+    nc = pl.num_programs(2)
+
+    @pl.when(c_idx == 0)
+    def _init():
+        dh_scr[...] = jnp.zeros_like(dh_scr)
+        da_scr[...] = jnp.zeros_like(da_scr)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)          # (Q, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)           # (Q,)
+    a = a_ref[0]
+    Bm = b_ref[0, :, 0, :].astype(jnp.float32)         # (Q, N)
+    Cm = c_ref[0, :, 0, :].astype(jnp.float32)         # (Q, N)
+    h_prev = st_ref[0, 0, 0].astype(jnp.float32)       # (N, P) entry state
+    dy = dy_ref[0, :, 0, :].astype(jnp.float32)        # (Q, P)
+    dh = dh_scr[...]                                   # (N, P) ∂L/∂h_c
+
+    _, Lcum, Ltot, scores, decay, tri = _chunk_tiles(dt, a, Bm, Cm,
+                                                     chunk=chunk)
+    xb = x * dt[:, None]
+    expL = jnp.exp(Lcum)
+    w = jnp.exp(Ltot - Lcum)
+
+    def mm(lhs, rhs, contract):
+        return jax.lax.dot_general(lhs, rhs, (contract, ((), ())),
+                                   preferred_element_type=jnp.float32)
+
+    # y = (scores ⊙ decay) xb + (C ⊙ e^{L}) h_prev
+    dM = mm(dy, xb, ((1,), (1,)))                      # (Q, Q)
+    dxb = mm(scores * decay, dy, ((0,), (0,)))         # Mᵀ dy   (Q, P)
+    dscores = dM * decay
+    dCm = mm(dscores, Bm, ((1,), (0,)))                # (Q, N)
+    dBm = mm(dscores, Cm, ((0,), (0,)))                # dscoresᵀ C (Q, N)
+    ddiff = jnp.where(tri, dM * scores * decay, 0.0)   # decay = e^{diff} ⊙ tri
+    dLcum = jnp.sum(ddiff, axis=1) - jnp.sum(ddiff, axis=0)
+
+    dyh = mm(dy, h_prev, ((1,), (1,)))                 # dy h_prevᵀ (Q, N)
+    dCm += dyh * expL[:, None]
+    dLcum += jnp.sum(dyh * Cm, axis=1) * expL
+    dh_prev = mm(Cm * expL[:, None], dy, ((0,), (0,)))  # (N, P)
+
+    # h = e^{Ltot} h_prev + (B ⊙ w)ᵀ xb,   ∂L/∂h = dh
+    dxb += mm(Bm * w[:, None], dh, ((1,), (0,)))       # (Q, P)
+    dBw = mm(xb, dh, ((1,), (1,)))                     # xb dhᵀ (Q, N)
+    dBm += dBw * w[:, None]
+    dw = jnp.sum(dBw * Bm, axis=1)                     # (Q,)
+    dLtot = jnp.exp(Ltot) * jnp.sum(dh * h_prev) + jnp.sum(dw * w)
+    dLcum -= dw * w
+    dh_prev += jnp.exp(Ltot) * dh
+
+    # Lcum = cumsum(la), Ltot = Lcum[-1] ⇒ dla_s = Σ_{t≥s} dLcum_t + dLtot
+    dla = jnp.sum(dLcum) - jnp.cumsum(dLcum) + dLcum + dLtot
+
+    # la = dt·a; xb = x·dt
+    ddt = dla * a + jnp.sum(dxb * x, axis=1)
+    da_scr[...] += jnp.sum(dla * dt)[None, None]
+    dx = dxb * dt[:, None]
+
+    dx_ref[0, :, 0, :] = dx
+    ddt_ref[0, :, 0] = ddt
+    db_ref[0, :, 0, :] = dBm
+    dc_ref[0, :, 0, :] = dCm
+    dh_scr[...] = dh_prev
+
+    @pl.when(c_idx == nc - 1)
+    def _finalize():
+        da_ref[0, 0] = da_scr[0, 0]
+
+
+def ssd_bwd_chunked_pallas(x, dt, A, Bm, Cm, states, dy, *, chunk=128,
+                           interpret=False):
+    """Reverse-scan backward.  states: (B, H, nc, N, P) chunk entry states
+    from the forward.  Returns (dx, ddt, dA, dBm, dCm) — dBm/dCm already
+    group-summed to (B, T, G, N), everything float32."""
+    Bb, T, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    assert T % chunk == 0, (T, chunk)
+    rep = H // G
+    nc = T // chunk
+    grid = (Bb, H, nc)
+
+    # grid step c processes chunk nc-1-c: the reverse scan is pure index
+    # arithmetic, the kernel body only sees "its" chunk.
+    def rev(c, n=nc):
+        return n - 1 - c
+
+    kernel = functools.partial(_ssd_bwd_kernel, chunk=chunk)
+    dx, ddt, dbh, dch, dab = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda b, h, c: (b, rev(c), h, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b, h, c: (b, rev(c), h)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, chunk, 1, N),
+                         lambda b, h, c, r=rep: (b, rev(c), h // r, 0)),
+            pl.BlockSpec((1, chunk, 1, N),
+                         lambda b, h, c, r=rep: (b, rev(c), h // r, 0)),
+            pl.BlockSpec((1, 1, 1, N, P), lambda b, h, c: (b, h, rev(c), 0, 0)),
+            pl.BlockSpec((1, chunk, 1, P), lambda b, h, c: (b, rev(c), h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda b, h, c: (b, rev(c), h, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b, h, c: (b, rev(c), h)),
+            pl.BlockSpec((1, chunk, 1, N), lambda b, h, c: (b, rev(c), h, 0)),
+            pl.BlockSpec((1, chunk, 1, N), lambda b, h, c: (b, rev(c), h, 0)),
+            pl.BlockSpec((1, 1), lambda b, h, c: (b, h)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bb, T, H, P), jnp.float32),
+            jax.ShapeDtypeStruct((Bb, T, H), jnp.float32),
+            jax.ShapeDtypeStruct((Bb, T, H, N), jnp.float32),
+            jax.ShapeDtypeStruct((Bb, T, H, N), jnp.float32),
+            jax.ShapeDtypeStruct((Bb, H), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((N, P), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, dt, A.astype(jnp.float32), Bm, Cm, states, dy)
+
+    dA = jnp.sum(dab, axis=0)                               # (H,)
+    # B/C are shared across each group's rep = H//G heads: sum the group.
+    dBm = dbh.reshape(Bb, T, G, rep, N).sum(axis=3)
+    dCm = dch.reshape(Bb, T, G, rep, N).sum(axis=3)
+    return dx, ddt, dA, dBm, dCm

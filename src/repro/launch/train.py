@@ -92,7 +92,8 @@ def run_pod(args) -> dict:
         arch=arch, l_split=args.l_split or F.default_l_split(arch),
         n_groups=G, seq_len=args.seq_len, per_group_batch=args.batch,
         H=args.H, lr_d=args.lr_d, lr_s=args.lr_s,
-        server_opt=args.server_opt, omega=omega)
+        server_opt=args.server_opt, omega=omega,
+        use_kernel=getattr(args, "use_kernel", False))
     jitted, _, s_spec, _ = F.jit_train_step(cfg, mesh, donate=True)
     cplane = ControlPlane(G, omega, cfg.H,
                           policy=getattr(args, "policy", "counter"),
@@ -212,6 +213,10 @@ def main() -> None:
                    help="Task Scheduler consumption policy (Alg. 3)")
     p.add_argument("--max-delay", type=int, default=16,
                    help="staleness cap D for aggregation (Alg. 4)")
+    p.add_argument("--use-kernel", action="store_true",
+                   help="run attention/SSD through the fused Pallas kernels "
+                        "(differentiable; interpret mode on CPU — see "
+                        "EXPERIMENTS.md §Perf)")
     p.add_argument("--mesh-data", type=int, default=1)
     p.add_argument("--mesh-model", type=int, default=1)
     p.add_argument("--groups-per-shard", type=int, default=4)

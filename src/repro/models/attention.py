@@ -10,7 +10,11 @@ Supported features (all composable):
 
 The public entry point dispatches to the Pallas flash-attention kernel
 (`repro.kernels.ops.flash_attention`) when enabled, otherwise to the pure
-jnp reference path below.  Both paths share parameter layout.
+jnp reference path below.  Both paths share parameter layout, and both are
+differentiable: the kernel path carries a ``jax.custom_vjp`` whose backward
+recomputes attention tiles from (q, k, v, o, lse) in fused Pallas kernels,
+so ``use_kernel=True`` works under ``jax.value_and_grad`` (training), not
+just inference.
 """
 from __future__ import annotations
 

@@ -169,7 +169,8 @@ def mamba_apply(params: Params, cfg: MambaConfig, x: jnp.ndarray,
     Cm = Cm.reshape(Bb, T, G, N)
     if use_kernel and not return_state:
         from repro.kernels import ops as kops
-        y = kops.ssd(xi, dt, A, Bm, Cm, chunk=min(cfg.chunk, T))
+        # differentiable (custom_vjp); ops.ssd clamps chunk to T and pads
+        y = kops.ssd(xi, dt, A, Bm, Cm, chunk=cfg.chunk)
         state = None
     else:
         # pad T to a chunk multiple (zero dt => identity decay, zero input)

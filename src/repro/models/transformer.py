@@ -196,9 +196,13 @@ def _run_stack(blocks, cfg: ArchConfig, h, *, positions, frontend=None,
         # full remat EXCEPT the post-TP-collective block outputs: backward
         # recompute stops at the saved tensors, so the forward's TP
         # all-reduces are never re-issued (collective term / ~1.5).
+        # "kernel_out" additionally saves the Pallas kernels' (o, lse) /
+        # chunk-state residuals — O(S·hd), never the (S×S) scores — so the
+        # custom_vjp backward doesn't re-run the forward kernel either.
         fn = jax.checkpoint(
             period_fn,
-            policy=jax.checkpoint_policies.save_only_these_names("tp_out"))
+            policy=jax.checkpoint_policies.save_only_these_names(
+                "tp_out", "kernel_out"))
     elif remat:
         fn = jax.checkpoint(period_fn)
     else:
