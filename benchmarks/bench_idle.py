@@ -2,23 +2,35 @@
 
 FedOptima runs through the integrated ControlPlane (scheduler + flow
 control + staleness accounting); the ω-cap (Eq. 3) is asserted on every
-enqueue during the run and on the recorded peak afterwards."""
+enqueue during the run and on the recorded peak afterwards.
+
+Also measures RoundExecutor overlap (the HOST-side dependency idle time
+the pipelined driver hides): window=1 (synchronous) vs window=2 (double-
+buffered) wall per round on a testbed-modeled workload, plus the hidden
+host-plan milliseconds and peak rounds in flight.  Results — including
+the window deltas — are written to ``BENCH_idle.json``.
+"""
 from __future__ import annotations
+
+import json
+import os
 
 from repro.core.baselines import REGISTRY
 from repro.core.simulation import simulate_fedoptima
 
+from . import common
 from .common import (MOBILENET_SPLIT, OMEGA, Row, TRANSFORMER6_SPLIT,
-                     VGG5_SPLIT, fedoptima_control, testbed_a, testbed_b,
-                     timed)
+                     VGG5_SPLIT, bench_duration, executor_overlap,
+                     fedoptima_control, testbed_a, testbed_b, timed)
 
-DUR = 600.0
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_idle.json")
 
 
-def run(model, cluster, tag):
+def run(model, cluster, tag, record):
+    dur = bench_duration(600.0)
     rows = []
     cp = fedoptima_control(cluster)
-    m, us = timed(simulate_fedoptima, model, cluster, duration=DUR,
+    m, us = timed(simulate_fedoptima, model, cluster, duration=dur,
                   omega=OMEGA, control=cp)
     assert cp.peak_buffered <= OMEGA, (cp.peak_buffered, OMEGA)
     rows.append(Row(f"idle/{tag}/fedoptima", us,
@@ -27,7 +39,7 @@ def run(model, cluster, tag):
     best_srv, best_dev = m.srv_idle_frac, m.dev_idle_frac
     base_srv, base_dev = [], []
     for name, fn in REGISTRY.items():
-        b, us = timed(fn, model, cluster, duration=DUR)
+        b, us = timed(fn, model, cluster, duration=dur)
         rows.append(Row(f"idle/{tag}/{name}", us,
                         f"srv_idle={b.srv_idle_frac:.3f};dev_idle={b.dev_idle_frac:.3f}"))
         base_srv.append(b.srv_idle_frac)
@@ -36,14 +48,55 @@ def run(model, cluster, tag):
     red_dev = 1.0 - best_dev / max(min(base_dev), 1e-9)
     rows.append(Row(f"idle/{tag}/reduction_vs_best_baseline", 0.0,
                     f"server={red_srv:.1%};device={red_dev:.1%}"))
+    record[tag] = {"fedoptima_srv_idle": m.srv_idle_frac,
+                   "fedoptima_dev_idle": m.dev_idle_frac,
+                   "reduction_srv": red_srv, "reduction_dev": red_dev,
+                   "profiles": m.profiles.summary()}
+    return rows
+
+
+def run_executor_overlap(model, cluster, tag, record):
+    """Host idle fraction before (sync) vs after (pipelined): the measured
+    host-plan/build time hidden behind device execution."""
+    rounds = 8 if common.SMOKE else 20
+    sync = executor_overlap(model, cluster, rounds=rounds, window=1)
+    pipe = executor_overlap(model, cluster, rounds=rounds, window=2)
+    hidden_ms = pipe["host_ms_hidden_per_round"]
+    saved = sync["wall_s_per_round"] - pipe["wall_s_per_round"]
+    # host idle fraction: exposed host time / wall, before vs after
+    idle_before = sync["host_s_exposed"] / max(sync["wall_s"], 1e-9)
+    idle_after = pipe["host_s_exposed"] / max(pipe["wall_s"], 1e-9)
+    rows = [
+        Row(f"idle/{tag}/executor_window1", 1e6 * sync["wall_s_per_round"],
+            f"host_exposed_frac={idle_before:.3f};in_flight="
+            f"{sync['peak_in_flight']}"),
+        Row(f"idle/{tag}/executor_window2", 1e6 * pipe["wall_s_per_round"],
+            f"host_exposed_frac={idle_after:.3f};in_flight="
+            f"{pipe['peak_in_flight']};host_ms_hidden={hidden_ms:.2f}"),
+        Row(f"idle/{tag}/executor_overlap_delta", 1e6 * saved,
+            f"saved_ms_per_round={1e3 * saved:.2f};plan_us="
+            f"{pipe['plan_us']:.0f}"),
+    ]
+    record[f"{tag}_executor"] = {
+        "window1": sync, "window2": pipe,
+        "delta": {"saved_s_per_round": saved,
+                  "host_ms_hidden_per_round": hidden_ms,
+                  "host_exposed_frac_before": idle_before,
+                  "host_exposed_frac_after": idle_after,
+                  "rounds_in_flight": pipe["peak_in_flight"]}}
     return rows
 
 
 def main() -> list[Row]:
+    record: dict = {"smoke": common.SMOKE, "duration_s": bench_duration(600.0)}
     rows = []
-    rows += run(VGG5_SPLIT, testbed_a(), "A_vgg5")
-    rows += run(MOBILENET_SPLIT, testbed_b(), "B_mobilenet")
-    rows += run(TRANSFORMER6_SPLIT, testbed_a(), "A_transformer6")
+    rows += run(VGG5_SPLIT, testbed_a(), "A_vgg5", record)
+    rows += run(MOBILENET_SPLIT, testbed_b(), "B_mobilenet", record)
+    rows += run(TRANSFORMER6_SPLIT, testbed_a(), "A_transformer6", record)
+    rows += run_executor_overlap(VGG5_SPLIT, testbed_a(), "A_vgg5", record)
+    with open(OUT_PATH, "w") as fh:
+        json.dump(record, fh, indent=2, sort_keys=True)
+    rows.append(Row("idle/json", 0.0, f"wrote={os.path.basename(OUT_PATH)}"))
     return rows
 
 

@@ -1,41 +1,91 @@
-"""Fig. 10/11: system throughput (samples/s) per method, both testbeds."""
+"""Fig. 10/11: system throughput (samples/s) per method, both testbeds.
+
+Also measures executor round throughput: rounds/s driven through the
+pipelined RoundExecutor at window=1 vs window=2 on a testbed-modeled
+workload (the window-2 gain is the hidden host-plan/build time).  The
+per-method numbers and the executor deltas are written to
+``BENCH_throughput.json``.
+"""
 from __future__ import annotations
+
+import json
+import os
 
 from repro.core.baselines import REGISTRY
 from repro.core.simulation import simulate_fedoptima
 
+from . import common
 from .common import (MOBILENET_SPLIT, OMEGA, Row, TRANSFORMER12_SPLIT,
-                     TRANSFORMER6_SPLIT, VGG5_SPLIT, fedoptima_control,
-                     testbed_a, testbed_b, timed)
+                     TRANSFORMER6_SPLIT, VGG5_SPLIT, bench_duration,
+                     executor_overlap, fedoptima_control, testbed_a,
+                     testbed_b, timed)
 
-DUR = 600.0
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_throughput.json")
 
 
-def run(model, cluster, tag):
+def run(model, cluster, tag, record):
+    dur = bench_duration(600.0)
     rows = []
     cp = fedoptima_control(cluster)
-    fo, us = timed(simulate_fedoptima, model, cluster, duration=DUR,
+    fo, us = timed(simulate_fedoptima, model, cluster, duration=dur,
                    omega=OMEGA, control=cp)
     assert cp.peak_buffered <= OMEGA
     rows.append(Row(f"throughput/{tag}/fedoptima", us,
                     f"samples_per_s={fo.throughput:.1f}"))
     best = 0.0
     for name, fn in REGISTRY.items():
-        b, us = timed(fn, model, cluster, duration=DUR)
+        b, us = timed(fn, model, cluster, duration=dur)
         rows.append(Row(f"throughput/{tag}/{name}", us,
                         f"samples_per_s={b.throughput:.1f}"))
         best = max(best, b.throughput)
+    speedup = fo.throughput / max(best, 1e-9)
     rows.append(Row(f"throughput/{tag}/speedup_vs_best_baseline", 0.0,
-                    f"x={fo.throughput / max(best, 1e-9):.2f}"))
+                    f"x={speedup:.2f}"))
+    record[tag] = {"fedoptima_samples_per_s": fo.throughput,
+                   "speedup_vs_best_baseline": speedup}
+    return rows
+
+
+def run_executor_throughput(model, cluster, tag, record):
+    rounds = 8 if common.SMOKE else 20
+    sync = executor_overlap(model, cluster, rounds=rounds, window=1)
+    pipe = executor_overlap(model, cluster, rounds=rounds, window=2)
+    rps_sync = 1.0 / max(sync["wall_s_per_round"], 1e-9)
+    rps_pipe = 1.0 / max(pipe["wall_s_per_round"], 1e-9)
+    rows = [
+        Row(f"throughput/{tag}/executor_window1",
+            1e6 * sync["wall_s_per_round"],
+            f"rounds_per_s={rps_sync:.2f};in_flight={sync['peak_in_flight']}"),
+        Row(f"throughput/{tag}/executor_window2",
+            1e6 * pipe["wall_s_per_round"],
+            f"rounds_per_s={rps_pipe:.2f};in_flight={pipe['peak_in_flight']}"
+            f";host_ms_hidden={pipe['host_ms_hidden_per_round']:.2f}"),
+        Row(f"throughput/{tag}/executor_speedup", 0.0,
+            f"x={rps_pipe / max(rps_sync, 1e-9):.2f}"),
+    ]
+    record[f"{tag}_executor"] = {
+        "window1_rounds_per_s": rps_sync,
+        "window2_rounds_per_s": rps_pipe,
+        "speedup": rps_pipe / max(rps_sync, 1e-9),
+        "host_ms_hidden_per_round": pipe["host_ms_hidden_per_round"],
+        "rounds_in_flight": pipe["peak_in_flight"]}
     return rows
 
 
 def main() -> list[Row]:
+    record: dict = {"smoke": common.SMOKE, "duration_s": bench_duration(600.0)}
     rows = []
-    rows += run(VGG5_SPLIT, testbed_a(), "A_vgg5")
-    rows += run(MOBILENET_SPLIT, testbed_b(), "B_mobilenet")
-    rows += run(TRANSFORMER6_SPLIT, testbed_a(), "A_transformer6")
-    rows += run(TRANSFORMER12_SPLIT, testbed_b(), "B_transformer12")
+    rows += run(VGG5_SPLIT, testbed_a(), "A_vgg5", record)
+    rows += run(MOBILENET_SPLIT, testbed_b(), "B_mobilenet", record)
+    rows += run(TRANSFORMER6_SPLIT, testbed_a(), "A_transformer6", record)
+    rows += run(TRANSFORMER12_SPLIT, testbed_b(), "B_transformer12", record)
+    rows += run_executor_throughput(TRANSFORMER6_SPLIT, testbed_a(),
+                                    "A_transformer6", record)
+    with open(OUT_PATH, "w") as fh:
+        json.dump(record, fh, indent=2, sort_keys=True)
+    rows.append(Row("throughput/json", 0.0,
+                    f"wrote={os.path.basename(OUT_PATH)}"))
     return rows
 
 

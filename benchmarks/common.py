@@ -6,14 +6,29 @@ Testbed A: 8 devices (Raspberry Pi classes, 4 speed groups), CPU server,
 (the figures reproduce *relative* orderings — see DESIGN.md §7)."""
 from __future__ import annotations
 
+import os
 import time
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass
+
+import numpy as np
 
 from repro.core.control_plane import ControlPlane
 from repro.core.simulation import SimModel, SimCluster, heterogeneous_cluster
 
 #: The paper's default global activation cap (Eq. 3) used across benchmarks.
 OMEGA = 8
+
+#: Smoke mode (CI): tiny simulated durations / fewer rounds so the full
+#: benchmark path runs in seconds.  Set by ``run.py --smoke`` or the
+#: BENCH_SMOKE env var; results are for wiring checks, not trajectories.
+SMOKE = os.environ.get("BENCH_SMOKE", "") not in ("", "0")
+
+
+def bench_duration(default: float, smoke: float = 30.0) -> float:
+    if SMOKE:
+        return smoke
+    return float(os.environ.get("BENCH_DUR", default))
 
 
 def fedoptima_control(cluster: SimCluster, omega: int = OMEGA,
@@ -69,6 +84,95 @@ class Row:
 
     def csv(self) -> str:
         return f"{self.name},{self.us_per_call:.1f},{self.derived}"
+
+
+# ---------------------------------------------------------------------------
+# Executor-overlap harness: a future-backed device stand-in
+# ---------------------------------------------------------------------------
+
+class StubDevice:
+    """Async-dispatch stand-in for the jit'd hybrid step.
+
+    ``step(state, batch)`` queues a round of duration ``round_s`` on a
+    single worker thread (a serialized device queue, like one mesh) and
+    returns immediately; the metrics are futures whose ``float()`` blocks
+    until that round completes — exactly the contract ``RoundExecutor``
+    drains against.  Use as a context manager (or call ``close``) so the
+    worker thread doesn't outlive the measurement.
+    """
+
+    class _Lazy:
+        def __init__(self, fut):
+            self._fut = fut
+
+        def __float__(self):
+            return float(self._fut.result())
+
+    def __init__(self, round_s: float):
+        self.round_s = round_s
+        self._pool = ThreadPoolExecutor(max_workers=1)
+
+    def _run(self):
+        time.sleep(self.round_s)
+        return 0.0
+
+    def step(self, state, batch):
+        fut = self._pool.submit(self._run)
+        return state, {"d_loss": self._Lazy(fut), "s_loss": self._Lazy(fut)}
+
+    def close(self):
+        self._pool.shutdown(wait=True)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+def executor_overlap(model: SimModel, cluster: SimCluster, *, H: int = 8,
+                     rounds: int = 20, window: int = 2,
+                     sim_time_scale: float = 0.004,
+                     host_frac: float = 0.4) -> dict:
+    """Measure RoundExecutor overlap on a modeled workload.
+
+    The stub device round is the testbed's lockstep cost — H × the
+    slowest device's per-iteration time from the SimModel/cluster cost
+    accounting — compressed by ``sim_time_scale`` (simulated seconds →
+    benchmark wall seconds, clamped to [10 ms, 100 ms] so every testbed
+    finishes quickly but still dwarfs scheduler noise).  Host batch
+    assembly is modeled at ``host_frac`` of the device round (the pod
+    driver's Python-side shard packing).  Returns wall/round for the
+    given window plus the executor's own overlap accounting — run with
+    window=1 vs 2 to get the hidden-host-time delta.
+    """
+    from repro.core.executor import RoundExecutor
+
+    t_iter = (model.dev_fwd_flops + model.dev_bwd_flops) / \
+        np.asarray(cluster.dev_flops, float)
+    round_sim_s = H * float(t_iter.max())
+    round_s = float(np.clip(round_sim_s * sim_time_scale, 0.01, 0.1))
+    host_s = host_frac * round_s
+    cp = ControlPlane(cluster.K, OMEGA, H)
+
+    def batch_fn(r, plan):
+        time.sleep(host_s)      # modeled host batch-assembly cost
+        return {}
+
+    with StubDevice(round_s) as dev:
+        ex = RoundExecutor(dev.step, cp, window=window)
+        t0 = time.perf_counter()
+        _, hist = ex.run(0, 0, rounds,
+                         active_fn=lambda r: np.ones(cluster.K, bool),
+                         batch_fn=batch_fn)
+        wall = time.perf_counter() - t0
+    out = ex.summary()
+    out.update(wall_s=wall, wall_s_per_round=wall / max(rounds, 1),
+               round_sim_s=round_sim_s, stub_round_s=round_s,
+               host_s_modeled=host_s, rounds_completed=len(hist),
+               plan_us=1e6 * float(np.mean([s.plan_s for s in ex.stats]))
+               if ex.stats else 0.0)
+    return out
 
 
 def timed(fn, *args, repeat: int = 1, **kw):

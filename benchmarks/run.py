@@ -3,6 +3,8 @@ table.  Prints ``name,us_per_call,derived`` CSV.
 
     PYTHONPATH=src python -m benchmarks.run              # all
     PYTHONPATH=src python -m benchmarks.run idle comm    # subset
+    PYTHONPATH=src python -m benchmarks.run --smoke idle throughput
+                                         # CI wiring check (tiny configs)
 """
 from __future__ import annotations
 
@@ -11,7 +13,7 @@ import sys
 from . import (bench_ablation_aux, bench_ablation_sched, bench_accuracy,
                bench_communication, bench_idle, bench_kernels, bench_memory,
                bench_partition, bench_resilience, bench_roofline,
-               bench_throughput)
+               bench_throughput, common)
 
 SUITES = {
     "communication": bench_communication,   # Fig. 2
@@ -28,8 +30,23 @@ SUITES = {
 }
 
 
+#: Suites whose durations honor common.SMOKE / bench_duration.
+SMOKE_SUITES = ("idle", "throughput")
+
+
 def main() -> None:
-    which = sys.argv[1:] or list(SUITES)
+    argv = sys.argv[1:]
+    smoke = "--smoke" in argv
+    if smoke:
+        argv.remove("--smoke")
+        common.SMOKE = True
+    # bare --smoke runs only the smoke-aware suites: the others ignore the
+    # flag and would silently run at full cost
+    which = argv or (list(SMOKE_SUITES) if smoke else list(SUITES))
+    ignored = [n for n in which if smoke and n not in SMOKE_SUITES]
+    if ignored:
+        print(f"# note: --smoke is ignored by suites {ignored} "
+              "(full duration)", flush=True)
     print("name,us_per_call,derived")
     for name in which:
         mod = SUITES[name]

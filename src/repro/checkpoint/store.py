@@ -3,12 +3,19 @@
 Layout::
 
     <dir>/step_000120/arrays.npz     # flattened leaves
+    <dir>/step_000120/extras.npz     # optional side payload (same format)
     <dir>/step_000120/tree.json      # treedef + leaf dtypes + metadata
     <dir>/step_000120/COMMITTED      # written last — presence = valid
 
 Writes go to a temp dir and are renamed into place, so a crash mid-write
 never corrupts the store (restart-safe).  ``latest_step`` ignores
 uncommitted snapshots.  ``retain`` garbage-collects old snapshots.
+
+``extras`` is a second, independently-structured pytree riding the same
+atomic snapshot — used for state whose structure varies run-to-run and so
+can't live inside the main tree (e.g. the control plane's per-group
+retention store: which groups are held changes with churn; the JSON
+``metadata`` describes the structure, ``extras.npz`` carries the arrays).
 """
 from __future__ import annotations
 
@@ -31,7 +38,7 @@ def _flatten_with_paths(tree) -> dict[str, np.ndarray]:
 
 
 def save(directory: str, step: int, tree: Any, metadata: dict | None = None,
-         retain: int = 3) -> str:
+         retain: int = 3, extras: Any = None) -> str:
     os.makedirs(directory, exist_ok=True)
     name = f"step_{step:08d}"
     final = os.path.join(directory, name)
@@ -42,6 +49,10 @@ def save(directory: str, step: int, tree: Any, metadata: dict | None = None,
         treedef = jax.tree_util.tree_structure(tree)
         meta = {"step": step, "treedef": str(treedef),
                 "keys": list(flat.keys()), "metadata": metadata or {}}
+        if extras is not None and jax.tree_util.tree_leaves(extras):
+            eflat = _flatten_with_paths(extras)
+            np.savez(os.path.join(tmp, "extras.npz"), **eflat)
+            meta["extra_keys"] = list(eflat.keys())
         with open(os.path.join(tmp, "tree.json"), "w") as f:
             json.dump(meta, f)
         with open(os.path.join(tmp, "COMMITTED"), "w") as f:
@@ -78,13 +89,9 @@ def latest_step(directory: str) -> int | None:
     return steps[-1] if steps else None
 
 
-def restore(directory: str, step: int, like: Any) -> Any:
-    """Restore into the structure of ``like`` (a pytree of arrays or
-    ShapeDtypeStructs).  Leaf order follows ``like``'s treedef."""
-    path = os.path.join(directory, f"step_{step:08d}")
-    if not os.path.exists(os.path.join(path, "COMMITTED")):
-        raise FileNotFoundError(f"no committed checkpoint at {path}")
-    with np.load(os.path.join(path, "arrays.npz")) as z:
+def _restore_npz(npz_path: str, like: Any) -> Any:
+    """Load a flat-keyed npz back into the structure of ``like``."""
+    with np.load(npz_path) as z:
         flat = {k: z[k] for k in z.files}
     ref = _flatten_with_paths(jax.tree.map(
         lambda x: np.zeros(x.shape, x.dtype) if hasattr(x, "shape") else x, like))
@@ -93,6 +100,32 @@ def restore(directory: str, step: int, like: Any) -> Any:
     assert len(keys) == len(leaves)
     out = [flat[k] for k in keys]
     return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _committed_path(directory: str, step: int) -> str:
+    path = os.path.join(directory, f"step_{step:08d}")
+    if not os.path.exists(os.path.join(path, "COMMITTED")):
+        raise FileNotFoundError(f"no committed checkpoint at {path}")
+    return path
+
+
+def restore(directory: str, step: int, like: Any) -> Any:
+    """Restore into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs).  Leaf order follows ``like``'s treedef."""
+    path = _committed_path(directory, step)
+    return _restore_npz(os.path.join(path, "arrays.npz"), like)
+
+
+def restore_extras(directory: str, step: int, like: Any) -> Any:
+    """Restore the snapshot's side payload (see ``save(..., extras=)``)
+    into the structure of ``like``.  Raises FileNotFoundError when the
+    snapshot was written without extras — callers know from the metadata
+    whether to expect one."""
+    path = _committed_path(directory, step)
+    npz = os.path.join(path, "extras.npz")
+    if not os.path.exists(npz):
+        raise FileNotFoundError(f"snapshot {path} has no extras payload")
+    return _restore_npz(npz, like)
 
 
 def restore_metadata(directory: str, step: int) -> dict:

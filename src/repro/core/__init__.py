@@ -3,7 +3,8 @@ from .partition import (LayerProfile, cnn_profile, transformer_profile,
 from .aggregator import AsyncAggregator, fedasync_update, staleness_weight
 from .scheduler import Message, TaskScheduler
 from .flow_control import FlowController
-from .control_plane import ControlPlane, RoundPlan
+from .control_plane import ControlPlane, RetentionStore, RoundPlan
+from .executor import RoundExecutor, RoundStats, StragglerProfiles
 from .simulation import (Metrics, Sim, SimCluster, SimModel,
                          heterogeneous_cluster, simulate_fedoptima)
 from .baselines import (REGISTRY, simulate_classic_fl, simulate_fedasync,

@@ -31,6 +31,16 @@ Per round, :meth:`ControlPlane.plan_round` emits a :class:`RoundPlan`:
     send_mask[h,g]  1 if group g holds a token and ships its rows
     agg_weight[g]   α_g = (staleness_g + 1)^-alpha_power, 0 beyond the
                     staleness cap D or for inactive groups (Alg. 4 l.13/16)
+    bcast_mask[g]   1 if group g receives the aggregated global model back
+                    (Alg. 4 line 20 — participants only; dropped groups
+                    keep their retained per-group state instead of being
+                    resynced by the broadcast)
+
+plus ``retire``/``restore`` group lists: a group that just dropped must
+have its dev/aux params gathered into the host :class:`RetentionStore`
+(``retire``) and a rejoining group's retained params scattered back
+on-mesh (``restore``) before the round is dispatched — the round executor
+(``core/executor.py``) performs the actual transfers.
 
 Knobs: ``omega`` (ring depth / Eq. 3 cap), ``policy`` ("counter" | "fifo"),
 ``max_delay`` (D), ``alpha_power`` (staleness exponent).
@@ -60,15 +70,84 @@ class RoundPlan:
     write_slot: np.ndarray   # (H,) int32
     send_mask: np.ndarray    # (H, G) float32
     agg_weight: np.ndarray   # (G,) float32
+    bcast_mask: np.ndarray = None   # (G,) float32; None -> all receive
+    retire: tuple = ()       # groups that just dropped: gather to retention
+    restore: tuple = ()      # rejoining groups: scatter retained state back
 
     def batch_fields(self) -> dict:
         """The plan as jit-step batch fields (see fedopt_step.SCHEDULE_KEYS
-        + ``agg_weight``)."""
+        + the per-group ``agg_weight``/``bcast_mask``)."""
         import jax.numpy as jnp
+        bcast = self.bcast_mask if self.bcast_mask is not None else \
+            np.ones(self.send_mask.shape[1], np.float32)
         return {"read_slot": jnp.asarray(self.read_slot, jnp.int32),
                 "write_slot": jnp.asarray(self.write_slot, jnp.int32),
                 "send_mask": jnp.asarray(self.send_mask, jnp.float32),
-                "agg_weight": jnp.asarray(self.agg_weight, jnp.float32)}
+                "agg_weight": jnp.asarray(self.agg_weight, jnp.float32),
+                "bcast_mask": jnp.asarray(bcast, jnp.float32)}
+
+
+class RetentionStore:
+    """Host-side per-group dev/aux retention for dropped groups (§3.4.2).
+
+    When a group leaves mid-run its last-synced device-side params are held
+    here (host copies) together with the model version they correspond to,
+    so the group rejoins from its OWN state at its recorded staleness
+    instead of being resynced by the aggregation broadcast.  Metadata
+    (which groups, at what version) is JSON-able and rides the checkpoint
+    store's ``tree.json``; the params themselves ride the snapshot's
+    ``extras.npz`` (see ``checkpoint/store.py``).
+    """
+
+    def __init__(self):
+        self._held: dict[int, dict] = {}   # g -> {"params": pytree|None,
+                                           #       "version": int}
+
+    def retain(self, g: int, params, version: int):
+        self._held[int(g)] = {"params": params, "version": int(version)}
+
+    def release(self, g: int) -> dict:
+        return self._held.pop(int(g))
+
+    def __contains__(self, g) -> bool:
+        return int(g) in self._held
+
+    def __len__(self) -> int:
+        return len(self._held)
+
+    @property
+    def groups(self) -> list[int]:
+        return sorted(self._held)
+
+    def version_of(self, g: int) -> int:
+        return self._held[int(g)]["version"]
+
+    def params_of(self, g: int):
+        return self._held[int(g)]["params"]
+
+    # -- checkpoint riding --
+    def meta_dict(self) -> dict:
+        """JSON-able part: which groups are held, at what version."""
+        return {"versions": {str(g): e["version"]
+                             for g, e in self._held.items()}}
+
+    def load_meta(self, meta: dict):
+        """Restore held-group metadata; params arrive via load_arrays."""
+        self._held = {int(g): {"params": None, "version": int(v)}
+                      for g, v in meta.get("versions", {}).items()}
+
+    def arrays(self) -> dict:
+        """The retained params as one pytree keyed by group (checkpoint
+        extras payload); empty dict when nothing is held."""
+        return {str(g): e["params"] for g, e in self._held.items()}
+
+    def load_arrays(self, tree: dict):
+        for g, params in tree.items():
+            if int(g) not in self._held:
+                raise KeyError(
+                    f"retention arrays for group {g} have no matching "
+                    "metadata entry — load_meta/load_state_dict first")
+            self._held[int(g)]["params"] = params
 
 
 class ControlPlane:
@@ -100,6 +179,8 @@ class ControlPlane:
             self.flow.register(g)
         self.versions = np.zeros(n_groups, np.int64)   # t_g
         self.version = 0                               # t (global model)
+        self.retention = RetentionStore()
+        self.prev_active = np.ones(n_groups, bool)     # last round's roster
         self.n_accepted = 0
         self.n_rejected = 0
         self.peak_buffered = 0        # peak Σ|Q_act| in flow units
@@ -141,6 +222,16 @@ class ControlPlane:
             np.asarray(produce, bool) & active[None, :]
         reads = np.ones(H, bool) if reads is None else np.asarray(reads, bool)
 
+        # roster transitions: a group that just left must be retained (its
+        # current dev/aux gathered to the host store) and a returning group
+        # restored from retention, both BEFORE the round is dispatched
+        retire = tuple(int(g)
+                       for g in np.flatnonzero(self.prev_active & ~active))
+        restore = tuple(int(g)
+                        for g in np.flatnonzero(~self.prev_active & active)
+                        if int(g) in self.retention)
+        self.prev_active = active.copy()
+
         read_slot = np.zeros(H, np.int32)
         write_slot = np.zeros(H, np.int32)
         send_mask = np.zeros((H, G), np.float32)
@@ -154,7 +245,18 @@ class ControlPlane:
 
         return RoundPlan(read_slot=read_slot, write_slot=write_slot,
                          send_mask=send_mask,
-                         agg_weight=self.agg_weights(active))
+                         agg_weight=self.agg_weights(active),
+                         bcast_mask=active.astype(np.float32),
+                         retire=retire, restore=restore)
+
+    def retain_group(self, g: int, params):
+        """Hold a dropped group's dev/aux params at its last-synced version
+        (the executor supplies the gathered host copies)."""
+        self.retention.retain(g, params, version=int(self.versions[g]))
+
+    def release_group(self, g: int) -> dict:
+        """Pop a rejoining group's retained entry ({"params", "version"})."""
+        return self.retention.release(g)
 
     def _plan_read(self, consume: bool) -> int:
         """Pick the slot the server trains on (Alg. 3 at slot granularity:
@@ -288,6 +390,11 @@ class ControlPlane:
         return sum(1 for s in self._slot_groups if s)
 
     @property
+    def slot_occupancy(self) -> list[list[int]]:
+        """Per-ring-slot live contributions (group ids), slot order."""
+        return [sorted(s) for s in self._slot_groups]
+
+    @property
     def consumption(self) -> dict[int, int]:
         """Per-group server-consumption counters (Alg. 3 state)."""
         return dict(self.scheduler.counters)
@@ -333,6 +440,8 @@ class ControlPlane:
             "n_rejected": int(self.n_rejected),
             "peak_buffered": int(self.peak_buffered),
             "peak_live_slots": int(self.peak_live_slots),
+            "prev_active": [bool(a) for a in self.prev_active],
+            "retention": self.retention.meta_dict(),
         }
 
     def load_state_dict(self, sd: dict):
@@ -368,6 +477,13 @@ class ControlPlane:
                           for s in slots)
             for g, slots in sd["queues"].items()}
         self.scheduler._arrival = deque(sd["arrival"])
+        if "prev_active" in sd:      # older snapshots predate retention
+            self.prev_active = np.asarray(sd["prev_active"], bool)
+        if "retention" in sd:
+            # metadata only: the params ride the checkpoint's extras.npz —
+            # the driver must call retention.load_arrays with the restored
+            # tree before any held group can rejoin
+            self.retention.load_meta(sd["retention"])
         self.flow.inflight_by.clear()
         self.flow.buffered = sum(len(q) for q in self.scheduler.q_act.values())
         if "tokens" in sd:

@@ -1,0 +1,423 @@
+"""Pipelined round executor: overlap host planning with device execution.
+
+The paper eliminates dependency idle time *on the mesh* (the device and
+server halves of the jit'd step have no data dependency), but a naive
+driver reintroduces it on the HOST: plan round r, build its batch,
+dispatch, then block on the metrics fetch before planning r+1 — the host
+and the mesh strictly alternate.  :class:`RoundExecutor` removes that
+alternation with a double-buffered loop riding JAX's async dispatch:
+
+* ``step(state, batch)`` returns *futures* immediately; nothing blocks
+  until a concrete value is read.  The executor keeps up to ``window``
+  dispatched rounds in flight and fetches each round's metrics lazily,
+  one drain behind the dispatch frontier — so the host plans round r+1
+  and assembles its batch while round r executes on the mesh.
+* ``window=1`` drains immediately after every dispatch, which is exactly
+  the old synchronous loop — same plans, same batches, same metrics, bit
+  for bit.  ``window=2`` is classic double buffering; deeper windows
+  trade checkpoint/retention latency for more slack.  Planning consumes
+  only host state (ControlPlane bookkeeping + the driver's RNG), never
+  device values, and the profile patterns are pure functions of the
+  profile seeds (``observe_round`` rescales without perturbing ratios),
+  so metric *values* are window-invariant; only wall time changes.
+
+The executor also owns the two host↔mesh consistency duties that the
+round loop used to interleave by hand:
+
+* **measured straggler profiles** — each drained round updates a
+  :class:`StragglerProfiles` EMA from the measured wall time; the
+  resulting ``produce``/``reads`` patterns feed the next
+  ``ControlPlane.plan_round`` instead of host-supplied placeholders
+  (REFL/Apodotiko-style: schedule from observed speeds, not assumed).
+* **per-group state retention** — when a plan retires a dropped group,
+  the executor gathers its dev/aux slices into the ControlPlane's
+  RetentionStore before dispatch; when a group rejoins, its retained
+  params are scattered back on-mesh so it resumes from its OWN state at
+  its recorded staleness (the aggregation broadcast is masked via
+  ``bcast_mask``, so the dropped rows were never resynced).
+
+The ω-cap invariant is enforced with a real ``RuntimeError`` (asserts
+are stripped under ``python -O``), surfacing the violating ring-slot
+occupancy.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Measured straggler profiles
+# ---------------------------------------------------------------------------
+
+class StragglerProfiles:
+    """EMA over *measured* per-group step/transfer times + server batch time.
+
+    The profile is observed, never assumed: the event simulator feeds it
+    per-device iteration/transfer durations as they complete, and the pod
+    executor feeds it each drained round's wall time (SimModel-style cost
+    accounting sets the relative per-group speeds; the measurement sets
+    the absolute scale — on a lockstep mesh the slowest group binds the
+    micro-iteration).  From the EMAs it derives the two patterns
+    ``ControlPlane.plan_round`` consumes:
+
+    ``produce(H)`` — (H, G) bool: group g emits at micro-iteration h when
+    its cumulative progress at its measured speed crosses a new whole
+    batch (the fastest group emits every iteration; a group at half speed
+    every other one).
+
+    ``reads(H)`` — (H,) bool: the server consumes a new scheduled batch at
+    iteration h when its measured per-batch time keeps up with the
+    micro-iteration cadence; a slower server consumes on a strided
+    subset (the skipped iterations replay the last slot — Fig. 1(d)'s
+    never-idle server, without phantom consumption events).
+
+    Unseeded profiles yield all-true patterns — identical to the
+    placeholder defaults, so homogeneous runs are bit-for-bit unchanged.
+    """
+
+    def __init__(self, n_groups: int, *, beta: float = 0.25,
+                 step_s=None, transfer_s=None, server_s: float | None = None):
+        if n_groups < 1:
+            raise ValueError(f"need n_groups >= 1, got {n_groups}")
+        self.G = n_groups
+        self.beta = beta
+        self.step_s = None if step_s is None else \
+            np.asarray(step_s, float).copy()        # (G,) s / micro-iter
+        self.transfer_s = None if transfer_s is None else \
+            np.asarray(transfer_s, float).copy()    # (G,) s / act batch
+        self.server_s = server_s                    # s / scheduled batch
+        self.n_obs = 0
+
+    @classmethod
+    def from_sim_model(cls, model, cluster, **kw) -> "StragglerProfiles":
+        """Seed from SimModel-style cost accounting (FLOPs / rates); the
+        measured observations then correct the seeds in place."""
+        step = (model.dev_fwd_flops + model.dev_bwd_flops) / \
+            np.asarray(cluster.dev_flops, float)
+        transfer = model.act_bytes / np.asarray(cluster.dev_bw, float)
+        server = model.srv_flops_per_batch / float(cluster.srv_flops)
+        return cls(cluster.K, step_s=step, transfer_s=transfer,
+                   server_s=server, **kw)
+
+    # -- observations ---------------------------------------------------
+    def _ema(self, old, new):
+        return new if old is None else (1.0 - self.beta) * old + \
+            self.beta * new
+
+    def observe_group(self, g: int, *, step_s: float | None = None,
+                      transfer_s: float | None = None):
+        """One measured device event (simulator path): an iteration took
+        ``step_s`` and/or an activation upload took ``transfer_s``."""
+        if step_s is not None:
+            if self.step_s is None:
+                self.step_s = np.full(self.G, float(step_s))
+            else:
+                self.step_s[g] = self._ema(self.step_s[g], float(step_s))
+        if transfer_s is not None:
+            if self.transfer_s is None:
+                self.transfer_s = np.full(self.G, float(transfer_s))
+            else:
+                self.transfer_s[g] = self._ema(self.transfer_s[g],
+                                               float(transfer_s))
+        self.n_obs += 1
+
+    def observe_server(self, batch_s: float):
+        self.server_s = self._ema(self.server_s, float(batch_s))
+        self.n_obs += 1
+
+    def observe_round(self, wall_s: float, H: int):
+        """Pod path: one lockstep round of H micro-iterations measured at
+        ``wall_s`` on the mesh.  The slowest group binds the lockstep
+        cadence, so the measurement rescales the profile to put the
+        slowest group at ``wall_s/H`` while preserving the relative
+        speeds already observed/seeded (uniform when unseeded).
+
+        ``step_s`` and ``server_s`` are rescaled by the SAME cadence
+        factor, so every ratio the derived patterns depend on is an exact
+        invariant of the seeds — ``produce``/``reads`` are pure functions
+        of the profile's relative speeds, never of wall-clock noise.
+        That is what makes pod plans deterministic and window-invariant
+        even for heterogeneously seeded profiles."""
+        per_iter = max(wall_s / max(H, 1), 1e-12)
+        if self.step_s is None:
+            self.step_s = np.full(self.G, per_iter)
+        else:
+            cadence = max(float(self.step_s.max()), 1e-12)
+            self.step_s = self._ema(self.step_s,
+                                    self.step_s / cadence * per_iter)
+            if self.server_s is not None:
+                self.server_s = self._ema(self.server_s,
+                                          self.server_s / cadence * per_iter)
+        if self.server_s is None:
+            # the fused step trains the server every micro-iteration: its
+            # per-batch time IS the (post-update) cadence, keeping rho=1
+            # exactly for any seeding combination
+            self.server_s = float(self.step_s.max())
+        self.n_obs += 1
+
+    # -- derived patterns ------------------------------------------------
+    @staticmethod
+    def _stride(rate: np.ndarray, H: int) -> np.ndarray:
+        """(H, ...) bool: True at h when cumulative progress at ``rate``
+        (batches per micro-iteration, in (0, 1]) crosses a whole batch."""
+        h = np.arange(H, dtype=float)[:, None] if rate.ndim else \
+            np.arange(H, dtype=float)
+        return np.floor((h + 1.0) * rate) > np.floor(h * rate)
+
+    def produce(self, H: int) -> np.ndarray:
+        """(H, G) bool straggler emission pattern for plan_round."""
+        if self.step_s is None:
+            return np.ones((H, self.G), bool)
+        t = np.maximum(self.step_s, 1e-12)
+        speed = t.min() / t                       # (G,) relative, in (0, 1]
+        return self._stride(speed[None, :], H)
+
+    def reads(self, H: int) -> np.ndarray:
+        """(H,) bool server-consumption pattern for plan_round."""
+        if self.server_s is None or self.step_s is None:
+            return np.ones(H, bool)
+        cadence = max(float(self.step_s.max()), 1e-12)
+        rho = np.asarray(min(1.0, cadence / max(self.server_s, 1e-12)))
+        return self._stride(rho, H)
+
+    def summary(self) -> dict:
+        """JSON-able snapshot for logs / benchmark records."""
+        out = {"n_obs": int(self.n_obs), "beta": self.beta}
+        if self.step_s is not None:
+            out["step_s"] = [float(v) for v in self.step_s]
+        if self.transfer_s is not None:
+            out["transfer_s"] = [float(v) for v in self.transfer_s]
+        if self.server_s is not None:
+            out["server_s"] = float(self.server_s)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# The executor
+# ---------------------------------------------------------------------------
+
+@dataclass
+class RoundStats:
+    """Per-round host/device accounting (times in seconds)."""
+    round: int
+    plan_s: float = 0.0          # plan_round + retention transfers
+    build_s: float = 0.0         # host batch assembly
+    in_flight_at_dispatch: int = 0
+    hidden_host_s: float = 0.0   # host work done while the mesh was busy
+                                 # (set at drain: clamped by the in-flight
+                                 # round's observed completion)
+    round_wall_s: float = 0.0    # measured device wall (set at drain)
+    plan: object = None          # the RoundPlan this round ran under —
+                                 # available in the on_metrics drain hook,
+                                 # dropped afterwards (memory)
+    _host_t0: float = field(default=0.0, repr=False)
+    _dispatch_t: float = field(default=0.0, repr=False)
+
+
+class RoundExecutor:
+    """Bounded-window pipelined driver for ``step(state, batch)`` programs.
+
+    Parameters
+    ----------
+    step : callable(state, batch) -> (state, metrics)
+        The jit'd hybrid round (or any async-dispatching stand-in whose
+        metric values support ``float()`` lazily).
+    cplane : ControlPlane
+        Host planner; its ``plan_round``/``finish_round`` bookkeeping is
+        committed at DISPATCH time (host order), never at drain time.
+    window : int
+        Max dispatched-but-undrained rounds.  1 = synchronous (bit-for-bit
+        the old loop), 2 = double buffering.
+    profiles : StragglerProfiles | None
+        Measured straggler profiles; when given, every plan uses
+        ``profiles.produce/reads`` and every drained round feeds the EMA.
+    gather / scatter : callables for per-group retention
+        ``gather(state, g) -> params`` (host copies) and
+        ``scatter(state, g, params) -> state``; see
+        ``fedopt_step.gather_group_state`` / ``scatter_group_state``.
+    registry : ElasticRegistry | None
+        Optional roster mirror: drops/rejoins are recorded with the round
+        index as the timestamp.
+    """
+
+    def __init__(self, step, cplane, *, window: int = 1, profiles=None,
+                 gather=None, scatter=None, registry=None):
+        if window < 1:
+            raise ValueError(f"window must be >= 1, got {window}")
+        self.step = step
+        self.cplane = cplane
+        self.window = window
+        self.profiles = profiles
+        self.gather = gather
+        self.scatter = scatter
+        self.registry = registry
+        self.stats: list[RoundStats] = []
+        self.peak_in_flight = 0
+        self.total_host_s = 0.0
+        self.hidden_host_s = 0.0
+        self._pending: deque = deque()     # (RoundStats, metrics futures)
+        self._last_drain_t: float | None = None
+        self._last_completion_t: float | None = None
+
+    # ------------------------------------------------------------------
+    def run(self, state, start_round: int, end_round: int, *, active_fn,
+            batch_fn, on_metrics=None, checkpoint_every: int = 0,
+            checkpoint_fn=None):
+        """Drive rounds [start_round, end_round).
+
+        active_fn(r) -> (G,) bool roster for round r (host RNG lives with
+        the caller, consumed in dispatch order — window-invariant).
+        batch_fn(r, plan) -> jit batch for round r.
+        on_metrics(r, metrics, stats) fires at drain, in round order.
+        checkpoint_fn(r, state): called with the post-round-r state after
+        a full pipeline flush, so the saved arrays and the ControlPlane
+        snapshot describe the same round (matching the synchronous loop's
+        save point exactly).
+        """
+        history: list[dict] = []
+        for r in range(start_round, end_round):
+            t0 = time.perf_counter()
+            active = np.asarray(active_fn(r), bool)
+            H = self.cplane.H
+            produce = self.profiles.produce(H) if self.profiles is not None \
+                else None
+            reads = self.profiles.reads(H) if self.profiles is not None \
+                else None
+            plan = self.cplane.plan_round(active=active, produce=produce,
+                                          reads=reads)
+            state = self._apply_retention(state, plan, r)
+            t1 = time.perf_counter()
+            batch = batch_fn(r, plan)
+            t2 = time.perf_counter()
+            st = RoundStats(round=r, plan_s=t1 - t0, build_s=t2 - t1,
+                            in_flight_at_dispatch=len(self._pending),
+                            plan=plan, _host_t0=t0, _dispatch_t=t2)
+            state, metrics = self.step(state, batch)
+            self.cplane.finish_round(active=active)
+            self._check_cap(r)
+            self._pending.append((st, metrics))
+            self.peak_in_flight = max(self.peak_in_flight,
+                                      len(self._pending))
+            while len(self._pending) >= self.window:
+                self._drain_one(history, on_metrics)
+            if checkpoint_fn is not None and checkpoint_every and \
+                    (r + 1) % checkpoint_every == 0:
+                while self._pending:          # flush: state == round r
+                    self._drain_one(history, on_metrics)
+                checkpoint_fn(r, state)
+        while self._pending:
+            self._drain_one(history, on_metrics)
+        return state, history
+
+    # ------------------------------------------------------------------
+    def _apply_retention(self, state, plan, r: int):
+        # the plan's bcast_mask already excludes dropped groups from the
+        # aggregation broadcast, so running churn WITHOUT retention wiring
+        # would hand a rejoining group phantom-trained params — refuse
+        # loudly rather than silently skip the transfers
+        cp = self.cplane
+        if plan.retire and self.gather is None:
+            raise RuntimeError(
+                f"round {r} drops groups {plan.retire} but this executor "
+                "has no gather fn — per-group retention must be wired "
+                "(fedopt_step.gather_group_state/scatter_group_state) for "
+                "runs with churn")
+        if plan.restore and self.scatter is None:
+            raise RuntimeError(
+                f"round {r} restores groups {plan.restore} but this "
+                "executor has no scatter fn — per-group retention must be "
+                "wired for runs with churn")
+        for g in plan.retire:
+            cp.retain_group(g, self.gather(state, g))
+            if self.registry is not None:
+                self.registry.leave(g, t=float(r))
+        for g in plan.restore:
+            # validate before popping: the error path must not destroy the
+            # retained metadata (a fixed-up rerun still needs the entry)
+            if cp.retention.params_of(g) is None:
+                raise RuntimeError(
+                    f"group {g} rejoins but its retained params are "
+                    "missing — a resumed run must restore the checkpoint's "
+                    "extras into ControlPlane.retention.load_arrays first")
+            entry = cp.release_group(g)
+            state = self.scatter(state, g, entry["params"])
+            if self.registry is not None:
+                self.registry.rejoin(g, t=float(r))
+        return state
+
+    def _check_cap(self, r: int):
+        cp = self.cplane
+        if not cp.within_cap:
+            raise RuntimeError(
+                f"activation cap ω={cp.omega} violated after round {r}: "
+                f"{cp.live_slots}/{cp.omega} live ring slots "
+                f"(occupancy={cp.slot_occupancy}), flow "
+                f"promised={cp.flow.promised} (buffered={cp.flow.buffered}, "
+                f"inflight={cp.flow.inflight}, "
+                f"tokens={cp.flow.active_tokens})")
+
+    def _drain_one(self, history, on_metrics):
+        st, metrics = self._pending.popleft()
+        t_fetch = time.perf_counter()
+        m = {k: float(v) for k, v in metrics.items()}   # blocks here only
+        t = time.perf_counter()
+        # device-completion estimate: a blocking fetch pins the completion
+        # at its return; a non-blocking fetch means the round finished at
+        # some unobservable earlier point — fall back to its dispatch time
+        # so overlap is only ever credited on evidence (a lower bound:
+        # hidden time is never overstated)
+        completion = t if (t - t_fetch) > 1e-4 else st._dispatch_t
+        # hidden host time for THIS round's plan+build: it overlapped the
+        # mesh only while the previously-dispatched round was still
+        # executing — clamp by that round's observed completion (a host
+        # interval outlasting the device work is exposed, not hidden)
+        if st.in_flight_at_dispatch and self._last_completion_t is not None:
+            st.hidden_host_s = max(
+                0.0, min(st._dispatch_t, self._last_completion_t)
+                - st._host_t0)
+        self._last_completion_t = completion
+        # device wall estimate: dispatch→done is exact when nothing was
+        # queued ahead; under pipelining the completion-to-completion gap
+        # is the steady-state round time — take the tighter of the two
+        wall = t - st._dispatch_t
+        if self._last_drain_t is not None:
+            wall = min(wall, max(t - self._last_drain_t, 1e-9))
+        self._last_drain_t = t
+        st.round_wall_s = wall
+        if self.profiles is not None:
+            self.profiles.observe_round(wall, self.cplane.H)
+        self.total_host_s += st.plan_s + st.build_s
+        self.hidden_host_s += st.hidden_host_s
+        self.stats.append(st)
+        history.append(m)
+        if on_metrics is not None:
+            on_metrics(st.round, m, st)
+        # the full RoundPlan (H×G schedule arrays) is only needed through
+        # the drain hook; keep the per-round stats list O(scalars) so long
+        # runs don't accumulate plans
+        st.plan = None
+
+    # ------------------------------------------------------------------
+    def summary(self) -> dict:
+        """JSON-able overlap accounting for logs / benchmarks."""
+        n = len(self.stats)
+        out = {
+            "rounds": n,
+            "window": self.window,
+            "peak_in_flight": self.peak_in_flight,
+            "host_s_total": self.total_host_s,
+            "host_s_hidden": self.hidden_host_s,
+            "host_s_exposed": self.total_host_s - self.hidden_host_s,
+            "host_ms_hidden_per_round":
+                1e3 * self.hidden_host_s / max(n, 1),
+            "device_s_per_round":
+                float(np.mean([s.round_wall_s for s in self.stats]))
+                if n else 0.0,
+        }
+        if self.profiles is not None:
+            out["profiles"] = self.profiles.summary()
+        return out

@@ -28,10 +28,14 @@ schedule fields per micro-iteration:
     send_mask[h,g]  which groups' rows refresh in that slot (flow-control
                     token grants; unsent rows keep the slot's old content)
 
-plus per-group ``agg_weight`` derived from real staleness counters
-(Alg. 4 line 16) instead of placeholder ones.  With ω=1, an identity
-schedule, and uniform weights this reduces bit-for-bit to the original
-single-buffer pipeline.
+plus two per-group fields: ``agg_weight`` derived from real staleness
+counters (Alg. 4 line 16) instead of placeholder ones, and ``bcast_mask``
+gating which groups receive the aggregated global model back (Alg. 4
+line 20 applies to *participants*; a dropped group's rows keep their
+current params so it can rejoin from its host-retained state at its
+recorded staleness — see ``ControlPlane``'s RetentionStore).  With ω=1, an
+identity schedule, uniform weights and an all-ones ``bcast_mask`` this
+reduces bit-for-bit to the original single-buffer pipeline.
 
 Structure of one hybrid step::
 
@@ -206,6 +210,10 @@ def abstract_train_state(cfg: FedStepConfig) -> Params:
 #: axis, NOT per-group) + per-group staleness weights (leading G axis).
 SCHEDULE_KEYS = ("read_slot", "write_slot", "send_mask")
 
+#: Per-group (G,) control fields consumed once per round (not scanned over
+#: the H micro-iterations): aggregation weights + broadcast receive mask.
+PER_GROUP_KEYS = ("agg_weight", "bcast_mask")
+
 
 def train_input_specs(cfg: FedStepConfig) -> dict:
     """Batch stand-ins: tokens/labels per group per local iteration (one
@@ -217,6 +225,7 @@ def train_input_specs(cfg: FedStepConfig) -> dict:
     batch = {"tokens": sds((G, H, b, S), jnp.int32),
              "labels": sds((G, H, b, S), jnp.int32),
              "agg_weight": sds((G,), jnp.float32),
+             "bcast_mask": sds((G,), jnp.float32),
              "read_slot": sds((H,), jnp.int32),
              "write_slot": sds((H,), jnp.int32),
              "send_mask": sds((H, G), jnp.float32)}
@@ -247,7 +256,7 @@ def concrete_train_batch(rng, cfg: FedStepConfig) -> dict:
     for k, s in train_input_specs(cfg).items():
         if k in out:
             continue
-        if k == "agg_weight":
+        if k in PER_GROUP_KEYS:
             out[k] = jnp.ones(s.shape, s.dtype)
         elif s.dtype == jnp.int32:
             out[k] = jax.random.randint(_stable_fold(rng, k),
@@ -329,6 +338,7 @@ def batch_specs(cfg: FedStepConfig, par: Parallelism) -> dict:
     out = {"tokens": P(dp, None, None, None),
            "labels": P(dp, None, None, None),
            "agg_weight": P(dp),
+           "bcast_mask": P(dp),
            # ring schedule: tiny host-planned control tensors, replicated
            "read_slot": P(None),
            "write_slot": P(None),
@@ -414,13 +424,17 @@ def make_train_step(cfg: FedStepConfig, par: Parallelism):
         srv, srv_opt = s_update(srv, gs, srv_opt, cfg.lr_s)
         return srv, srv_opt, s_loss
 
-    def aggregate(dev_aux, weights):
+    def aggregate(dev_aux, weights, recv_mask):
         """Async staleness-weighted aggregation over the group axis (Alg. 4
         lines 12-19 telescoped: the sequential α-lerps over one round equal
         a normalized weighted average with per-group staleness weights
         supplied by the host control plane).  All-zero weights mean every
         update was rejected (too stale / absent — Alg. 4 line 13): the
-        groups keep their current params instead of being zeroed."""
+        groups keep their current params instead of being zeroed.  The
+        broadcast back (Alg. 4 line 20) is masked by ``recv_mask``:
+        dropped groups do NOT receive the global model — their rows keep
+        current params so a rejoin scatters their host-retained state in,
+        preserving true per-group staleness."""
         w_sum = jnp.sum(weights)
         w = weights / jnp.maximum(w_sum, 1e-9)
 
@@ -428,7 +442,9 @@ def make_train_step(cfg: FedStepConfig, par: Parallelism):
             xw = x.astype(jnp.float32) if cfg.agg_compress is False else \
                 _dequant(_quant(x))
             g = jnp.tensordot(w, xw, axes=1).astype(x.dtype)
-            return jnp.where(w_sum > 0, jnp.broadcast_to(g[None], x.shape), x)
+            rows = (recv_mask > 0.5).reshape((-1,) + (1,) * (x.ndim - 1))
+            out = jnp.where(rows, jnp.broadcast_to(g[None], x.shape), x)
+            return jnp.where(w_sum > 0, out, x)
 
         return jax.tree.map(mean_bcast, dev_aux)
 
@@ -500,9 +516,10 @@ def make_train_step(cfg: FedStepConfig, par: Parallelism):
             return carry, (jnp.mean(d_loss), s_loss)
 
         # (G, H, ...) -> scan-major (H, G, ...); the schedule fields already
-        # carry H on the leading axis and pass through unchanged
+        # carry H on the leading axis and pass through unchanged; the
+        # per-group (G,) control fields are consumed once after the scan
         xs = {k: v if k in SCHEDULE_KEYS else jnp.moveaxis(v, 1, 0)
-              for k, v in batch.items() if k != "agg_weight"}
+              for k, v in batch.items() if k not in PER_GROUP_KEYS}
         if cfg.server_accum:
             zeros = jax.tree.map(
                 lambda p: jnp.zeros(p.shape, jnp.float32), state["srv"])
@@ -523,7 +540,8 @@ def make_train_step(cfg: FedStepConfig, par: Parallelism):
             dev, aux, srv, srv_opt = carry[:4]
 
         # ---- end-of-round async aggregation (Alg. 1 l.13, Alg. 4 l.12-19)
-        dev, aux = aggregate((dev, aux), batch["agg_weight"])
+        dev, aux = aggregate((dev, aux), batch["agg_weight"],
+                             batch["bcast_mask"])
 
         new_state = dict(state, dev=dev, aux=aux, srv=srv, srv_opt=srv_opt,
                          step=state["step"] + 1,
@@ -569,6 +587,42 @@ def jit_train_step(cfg: FedStepConfig, mesh, *, donate: bool = True):
                      out_shardings=(s_spec, m_spec),
                      donate_argnums=(0,) if donate else ())
     return jitted, state, s_spec, b_spec
+
+
+# ---------------------------------------------------------------------------
+# Per-group state retention (dropped groups — §3.4.2)
+# ---------------------------------------------------------------------------
+
+def gather_group_state(state: Params, g: int) -> dict:
+    """Host copies of one group's dev/aux slices for the retention store.
+
+    Blocks until those leaves are materialized (a targeted device→host
+    sync): under pipelined dispatch this waits only for the rounds already
+    in flight, and only on the small device-side block, not the server
+    params."""
+    take = lambda tree: jax.tree.map(lambda x: np.asarray(x[g]), tree)
+    return {"dev": take(state["dev"]), "aux": take(state["aux"])}
+
+
+def scatter_group_state(state: Params, g: int, retained: dict,
+                        state_shardings=None) -> Params:
+    """Functionally write one group's retained dev/aux slices back into the
+    stacked state (rejoin path).  ``state_shardings`` (the jit step's state
+    spec dict) re-pins the updated stacks so the next dispatch sees the
+    same shardings it was compiled for."""
+    def put(stacked, sl, spec):
+        def one(x, v, s=None):
+            y = x.at[g].set(jnp.asarray(v, x.dtype))
+            return jax.device_put(y, s) if s is not None else y
+        if spec is None:
+            return jax.tree.map(one, stacked, sl)
+        return jax.tree.map(one, stacked, sl, spec)
+
+    new = dict(state)
+    for key in ("dev", "aux"):
+        spec = None if state_shardings is None else state_shardings[key]
+        new[key] = put(state[key], retained[key], spec)
+    return new
 
 
 # ---------------------------------------------------------------------------

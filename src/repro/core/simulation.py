@@ -20,6 +20,7 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from .control_plane import ControlPlane
+from .executor import StragglerProfiles
 from .scheduler import Message
 
 
@@ -103,6 +104,7 @@ class Metrics:
     rounds: int = 0
     max_buffered: int = 0         # peak Σ|Q_act| (memory check)
     trace: list = field(default_factory=list)
+    profiles: StragglerProfiles = None   # measured per-device EMAs (if kept)
 
     def __post_init__(self):
         if self.dev_busy is None:
@@ -136,7 +138,8 @@ def simulate_fedoptima(model: SimModel, cluster: SimCluster, *,
                        duration: float, omega: int = 8, H: int = 10,
                        max_delay: int = 16, policy: str = "counter",
                        hooks=None, churn=None, seed: int = 0,
-                       control: ControlPlane | None = None) -> Metrics:
+                       control: ControlPlane | None = None,
+                       profiles: StragglerProfiles | None = None) -> Metrics:
     """Event simulation of FedOptima.
 
     hooks (optional): object with callbacks driving real training:
@@ -149,6 +152,12 @@ def simulate_fedoptima(model: SimModel, cluster: SimCluster, *,
         controller and staleness accounting; by default one is built with
         per-device flow units (Eq. 3: Σ_k |Q_k^act| ≤ ω strict).  Passing
         it in lets callers inspect peak buffers / counters afterwards.
+    profiles (optional): a StragglerProfiles fed with MEASURED per-device
+        iteration/transfer durations and server batch times as they
+        complete (EMA).  By default one is created; it is returned on
+        ``Metrics.profiles`` so callers can feed its ``produce``/``reads``
+        patterns into ``ControlPlane.plan_round`` (real straggler
+        profiles, not host-supplied placeholders).
     """
     sim = Sim()
     K = cluster.K
@@ -167,6 +176,10 @@ def simulate_fedoptima(model: SimModel, cluster: SimCluster, *,
             "so the flow budget is the strict per-device Eq. 3 cap")
     cp = control if control is not None else \
         ControlPlane.for_sim(K, omega, policy=policy, max_delay=max_delay)
+    prof = profiles if profiles is not None else StragglerProfiles(K)
+    if prof.G != K:
+        raise ValueError(f"profiles track {prof.G} groups, cluster has {K}")
+    m.profiles = prof
     sched = cp.scheduler
     flow = cp.flow
     rng = np.random.default_rng(seed)
@@ -196,10 +209,12 @@ def simulate_fedoptima(model: SimModel, cluster: SimCluster, *,
             return
         m.dev_busy[k] += sim.t - start
         m.dev_samples += model.batch_size
+        prof.observe_group(k, step_s=sim.t - start)
         send = flow.can_send(k)
         if send:
             flow.mark_sent(k)
             tx = model.act_bytes / bw[k]
+            prof.observe_group(k, transfer_s=tx)
             m.bytes_up += model.act_bytes
             sim.after(tx, act_arrive, k)
         if hooks:
@@ -268,6 +283,7 @@ def simulate_fedoptima(model: SimModel, cluster: SimCluster, *,
     def server_train_done(k, start):
         m.srv_busy += sim.t - start
         m.srv_batches += 1
+        prof.observe_server(sim.t - start)
         if hooks:
             hooks.server_train(k)
         srv_state["busy"] = False

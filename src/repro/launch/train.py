@@ -5,15 +5,27 @@ Two modes:
 ``--mode pod``   — the datacenter hybrid step (core/fedopt_step) on a local
                    mesh: every FL device group trains its device-side block
                    on its own non-IID synthetic shard; the server block
-                   trains centrally on the activation stream.  Each round is
-                   planned by the host ControlPlane (core/control_plane):
-                   the ω-deep activation ring schedule (--omega), flow-
-                   control send masks, and staleness-derived aggregation
-                   weights all come from real Alg. 2-4 state.  Supports
-                   checkpoint/restart (atomic store), elastic group dropout
-                   (--p-drop) with staleness-weighted aggregation, and any
-                   ``--arch`` at its smoke reduction (--full uses the real
-                   config; CPU-feasible only for the smallest archs).
+                   trains centrally on the activation stream.  Rounds are
+                   driven by the pipelined RoundExecutor (core/executor):
+                   host planning + batch assembly for round r+1 overlap
+                   round r's device execution (--window in-flight rounds;
+                   --window 1 is the synchronous loop bit-for-bit), each
+                   round is planned by the host ControlPlane
+                   (core/control_plane) — the ω-deep activation ring
+                   schedule (--omega), flow-control send masks, straggler
+                   produce/reads patterns (relative speeds seeded via
+                   ``args.profiles``, absolute scale from measured round
+                   walls; uniform default ≡ placeholder patterns), and
+                   staleness-derived aggregation weights all come from
+                   real Alg. 2-4 state.
+                   Supports checkpoint/restart (atomic store, retention
+                   extras included) and elastic group dropout (--p-drop):
+                   dropped groups are retained host-side and rejoin from
+                   their OWN params at their recorded staleness (the
+                   aggregation broadcast is masked — no resync-everyone).
+                   Any ``--arch`` runs at its smoke reduction (--full uses
+                   the real config; CPU-feasible only for the smallest
+                   archs).
 
 ``--mode sim``   — the paper's lab-testbed experiment: the event-driven
                    cluster simulator drives real JAX training in event
@@ -38,9 +50,11 @@ from repro.checkpoint import store
 from repro.configs import registry
 from repro.core import fedopt_step as F
 from repro.core.control_plane import ControlPlane
+from repro.core.executor import RoundExecutor, StragglerProfiles
 from repro.data.partitioner import dirichlet_partition
 from repro.data.synthetic import lm_dataset
 from repro.launch.mesh import make_debug_mesh, n_groups_of
+from repro.runtime.elastic import ElasticRegistry
 
 
 # ---------------------------------------------------------------------------
@@ -87,11 +101,13 @@ def run_pod(args) -> dict:
     mesh = make_debug_mesh(args.mesh_data, args.mesh_model)
     G = n_groups_of(mesh) * args.groups_per_shard
     # control-plane knobs default for programmatic callers' bare Namespaces
-    omega = getattr(args, "omega", 1)
+    omega = getattr(args, "omega", None) or 1
+    window = getattr(args, "window", None) or 2
+    H = getattr(args, "H", None) or 4
     cfg = F.FedStepConfig(
         arch=arch, l_split=args.l_split or F.default_l_split(arch),
         n_groups=G, seq_len=args.seq_len, per_group_batch=args.batch,
-        H=args.H, lr_d=args.lr_d, lr_s=args.lr_s,
+        H=H, lr_d=args.lr_d, lr_s=args.lr_s,
         server_opt=args.server_opt, omega=omega,
         use_kernel=getattr(args, "use_kernel", False))
     jitted, _, s_spec, _ = F.jit_train_step(cfg, mesh, donate=True)
@@ -99,11 +115,11 @@ def run_pod(args) -> dict:
                           policy=getattr(args, "policy", "counter"),
                           max_delay=getattr(args, "max_delay", 16))
 
+    like = jax.eval_shape(lambda: F.init_train_state(
+        jax.random.PRNGKey(args.seed), cfg))
     start_round = 0
     if args.ckpt_dir and store.latest_step(args.ckpt_dir) is not None:
         start_round = store.latest_step(args.ckpt_dir)
-        like = jax.eval_shape(lambda: F.init_train_state(
-            jax.random.PRNGKey(args.seed), cfg))
         state = store.restore(args.ckpt_dir, start_round, like)
         if "act_buf" in state:
             ring = jax.tree.leaves(state["act_buf"])[0].shape[0]
@@ -117,6 +133,15 @@ def run_pod(args) -> dict:
             # restore the host plan with the ring it describes, or slot
             # occupancy and staleness history silently reset on resume
             cplane.load_state_dict(meta["control_plane"])
+            if len(cplane.retention):
+                # the retained per-group params ride the snapshot's extras
+                slice_like = {
+                    k: jax.tree.map(
+                        lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype),
+                        like[k]) for k in ("dev", "aux")}
+                cplane.retention.load_arrays(store.restore_extras(
+                    args.ckpt_dir, start_round,
+                    {str(g): slice_like for g in cplane.retention.groups}))
         state = jax.device_put(state, s_spec)
         print(f"resumed from round {start_round}")
     else:
@@ -125,32 +150,63 @@ def run_pod(args) -> dict:
 
     streams = _group_streams(cfg, seed=args.seed)
     rng = np.random.default_rng(args.seed + start_round)
-    history = []
-    t0 = time.time()
-    for r in range(start_round, args.rounds):
+
+    registry_ = ElasticRegistry()
+    for g in range(G):       # one pod "device" per mesh group (nominal rates)
+        registry_.join(flops_per_s=1.0, bandwidth=1.0)
+    # Straggler profiles: the lockstep mesh can only measure the round's
+    # absolute scale, so RELATIVE group speeds come from the seeds —
+    # programmatic callers inject a cost-model-seeded profile via
+    # args.profiles (e.g. StragglerProfiles.from_sim_model) to activate
+    # straggler-aware produce/reads planning; the unseeded default is
+    # uniform, whose patterns equal the placeholder defaults (that
+    # degeneracy is what keeps homogeneous runs bit-for-bit reproducible).
+    profiles = getattr(args, "profiles", None) or StragglerProfiles(G)
+    executor = RoundExecutor(
+        jitted, cplane, window=window,
+        profiles=profiles,
+        gather=F.gather_group_state,
+        scatter=lambda st, g, p: F.scatter_group_state(
+            st, g, p, state_shardings=s_spec),
+        registry=registry_)
+
+    def active_fn(r):
         active = (rng.random(G) >= args.p_drop).astype(np.float32)
         if active.sum() == 0:
             active[rng.integers(0, G)] = 1.0
-        plan = cplane.plan_round(active=active.astype(bool))
-        batch = _make_batch(cfg, streams, rng, plan)
-        state, metrics = jitted(state, batch)
-        cplane.finish_round(active=active.astype(bool))
-        assert cplane.within_cap, "activation cap ω violated"
-        m = {k: float(v) for k, v in metrics.items()}
-        history.append(m)
+        return active.astype(bool)
+
+    def batch_fn(r, plan):
+        return _make_batch(cfg, streams, rng, plan)
+
+    t0 = time.time()
+
+    def on_metrics(r, m, st):
+        nonlocal t0
         if (r + 1) % args.log_every == 0:
             tok_s = cfg.global_batch * cfg.seq_len * args.log_every / \
                 (time.time() - t0)
+            n_active = int(np.sum(np.asarray(st.plan.bcast_mask) > 0.5))
             print(f"round {r+1:4d}  d_loss {m['d_loss']:.4f}  "
-                  f"s_loss {m['s_loss']:.4f}  active {int(active.sum())}/{G}"
+                  f"s_loss {m['s_loss']:.4f}  active {n_active}/{G}"
                   f"  {tok_s:,.0f} tok/s")
             t0 = time.time()
-        if args.ckpt_dir and (r + 1) % args.ckpt_every == 0:
-            host_state = jax.tree.map(np.asarray, state)
-            store.save(args.ckpt_dir, r + 1, host_state,
-                       metadata={"round": r + 1, "arch": arch.name,
-                                 "control_plane": cplane.state_dict()})
-    return {"history": history, "final": history[-1] if history else None}
+
+    def checkpoint_fn(r, ckpt_state):
+        host_state = jax.tree.map(np.asarray, ckpt_state)
+        extras = cplane.retention.arrays()
+        store.save(args.ckpt_dir, r + 1, host_state,
+                   metadata={"round": r + 1, "arch": arch.name,
+                             "control_plane": cplane.state_dict()},
+                   extras=extras or None)
+
+    state, history = executor.run(
+        state, start_round, args.rounds,
+        active_fn=active_fn, batch_fn=batch_fn, on_metrics=on_metrics,
+        checkpoint_every=args.ckpt_every if args.ckpt_dir else 0,
+        checkpoint_fn=checkpoint_fn if args.ckpt_dir else None)
+    return {"history": history, "final": history[-1] if history else None,
+            "executor": executor.summary()}
 
 
 # ---------------------------------------------------------------------------
@@ -164,6 +220,13 @@ def run_sim(args) -> dict:
     from repro.data.pipeline import DeviceDataset
     from repro.data.synthetic import classification_dataset
     from repro.models import cnn
+
+    # sim-mode control-plane knobs: honor the CLI flags (the paper's lab
+    # defaults ω=8, H=10 apply only when the flags are left unset)
+    omega = getattr(args, "omega", None) or 8
+    H = getattr(args, "H", None) or 10
+    policy = getattr(args, "policy", "counter")
+    max_delay = getattr(args, "max_delay", 16)
 
     data = classification_dataset(4096, 10, img_size=16, seed=args.seed)
     parts = dirichlet_partition(data.y, args.devices, alpha=0.5,
@@ -179,17 +242,33 @@ def run_sim(args) -> dict:
                          act_bytes=2e6, dev_model_bytes=1e6,
                          full_model_bytes=4e6, batch_size=32)
     cluster = heterogeneous_cluster(args.devices)
+    control = ControlPlane.for_sim(args.devices, omega, policy=policy,
+                                   max_delay=max_delay)
+    profiles = StragglerProfiles(args.devices)
     metrics = simulate_fedoptima(sim_model, cluster, duration=args.duration,
-                                 omega=8, H=10, hooks=learner)
+                                 omega=omega, H=H, policy=policy,
+                                 max_delay=max_delay, seed=args.seed,
+                                 hooks=learner, control=control,
+                                 profiles=profiles)
     xte, yte = data.x[:512], data.y[:512]
     acc = learner.eval_accuracy(xte, yte)
+    # the measured per-device profiles drive a straggler-aware plan: slow
+    # devices are scheduled fewer emissions per round, the server reads at
+    # its measured cadence — the same patterns run_pod feeds per round
+    produce, reads = profiles.produce(H), profiles.reads(H)
     print(f"sim: {args.devices} devices, {args.duration}s simulated | "
           f"srv idle {metrics.srv_idle_frac:.1%}  dev idle "
           f"{metrics.dev_idle_frac:.1%}  throughput {metrics.throughput:.0f} "
           f"samples/s  train-set acc {acc:.3f}")
+    print(f"measured straggler profile: emissions/round "
+          f"{produce.sum(axis=0).tolist()} of H={H}, server reads "
+          f"{int(reads.sum())}/{H}")
     return {"accuracy": acc, "srv_idle": metrics.srv_idle_frac,
             "dev_idle": metrics.dev_idle_frac,
-            "throughput": metrics.throughput}
+            "throughput": metrics.throughput,
+            "profiles": profiles.summary(),
+            "produce_per_round": produce.sum(axis=0).tolist(),
+            "reads_per_round": int(reads.sum())}
 
 
 def main() -> None:
@@ -202,13 +281,21 @@ def main() -> None:
     p.add_argument("--seq-len", type=int, default=128)
     p.add_argument("--batch", type=int, default=8, dest="batch",
                    help="sequences per group per round")
-    p.add_argument("--H", type=int, default=4)
+    p.add_argument("--H", type=int, default=None,
+                   help="local iterations per round (pod default 4, "
+                        "sim default 10)")
     p.add_argument("--l-split", type=int, default=0)
     p.add_argument("--lr-d", type=float, default=0.05)
     p.add_argument("--lr-s", type=float, default=0.05)
     p.add_argument("--server-opt", default="sgd", choices=("sgd", "adamw"))
-    p.add_argument("--omega", type=int, default=1,
-                   help="activation ring depth ω (scheduled batches, Eq. 3)")
+    p.add_argument("--omega", type=int, default=None,
+                   help="activation cap ω (scheduled batches, Eq. 3; pod "
+                        "ring default 1, sim default 8)")
+    p.add_argument("--window", type=int, default=2,
+                   help="pipelined rounds in flight (pod mode): 1 = "
+                        "synchronous host loop, 2 = double-buffered "
+                        "planning (host plan/batch-build overlaps device "
+                        "execution; metric values are window-invariant)")
     p.add_argument("--policy", default="counter", choices=("counter", "fifo"),
                    help="Task Scheduler consumption policy (Alg. 3)")
     p.add_argument("--max-delay", type=int, default=16,

@@ -21,6 +21,9 @@ class DeviceInfo:
     bandwidth: float            # bytes/s
     joined_at: float = 0.0
     active: bool = True
+    left_at: float | None = None   # time of the last departure (None: never
+                                   # left, or currently active)
+    absences: int = 0              # departures so far (churn accounting)
 
 
 @dataclass
@@ -34,14 +37,29 @@ class ElasticRegistry:
         self.devices[did] = DeviceInfo(did, flops_per_s, bandwidth, t, True)
         return did
 
-    def leave(self, device_id: int):
+    def leave(self, device_id: int, t: float | None = None):
         if device_id in self.devices:
-            self.devices[device_id].active = False
+            info = self.devices[device_id]
+            if info.active:
+                # only the first leave of an absence records the timestamp:
+                # a repeated (defensive) leave must not reset or erase it
+                info.absences += 1
+                info.left_at = t
+            info.active = False
 
     def rejoin(self, device_id: int, t: float = 0.0):
         if device_id in self.devices:
             self.devices[device_id].active = True
             self.devices[device_id].joined_at = t
+            self.devices[device_id].left_at = None
+
+    def absence(self, device_id: int, t: float) -> float | None:
+        """How long device_id has been gone as of time t (None if active
+        or its departure was recorded without a timestamp)."""
+        info = self.devices[device_id]
+        if info.active or info.left_at is None:
+            return None
+        return t - info.left_at
 
     @property
     def active_ids(self) -> list[int]:

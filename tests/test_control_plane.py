@@ -199,6 +199,68 @@ def test_state_dict_roundtrip_preserves_plan():
             assert cp.consumption == cp2.consumption
 
 
+def test_state_dict_roundtrip_partial_ring_with_dropped_groups():
+    """Checkpoint/resume with an ω>1 ring only PARTIALLY occupied and
+    dropped groups present: ring occupancy, the dropped-roster
+    (prev_active) and the retention store (metadata + arrays) all survive,
+    and the restored plane plans the rejoin identically — same restore
+    list, same staleness weights."""
+    import json
+
+    G, omega, H = 3, 2, 4
+    # group 0 produces every iteration, group 1 sparsely; the server reads
+    # on alternate iterations -> a backlog leaves the ring partially live
+    produce = np.zeros((H, G), bool)
+    produce[:, 0] = True
+    produce[::4, 1] = True
+    reads = np.arange(H) % 2 == 0
+    active = np.array([True, True, False])      # group 2 dropped
+
+    cp = ControlPlane(G, omega, H)
+    plans = [cp.plan_round(active=active, produce=produce, reads=reads)]
+    assert plans[0].retire == (2,)
+    cp.retain_group(2, {"dev": {"w": np.arange(4.0)},
+                        "aux": {"b": np.full(2, 7.0)}})
+    cp.finish_round(active=active)
+    for _ in range(2):
+        plans.append(cp.plan_round(active=active, produce=produce,
+                                   reads=reads))
+        cp.finish_round(active=active)
+    assert 0 < cp.live_slots <= omega           # partially occupied ring
+
+    sd = cp.state_dict()
+    json.dumps(sd)                              # metadata-safe
+    cp2 = ControlPlane(G, omega, H)
+    cp2.load_state_dict(sd)
+    cp2.retention.load_arrays(cp.retention.arrays())
+    assert cp2.within_cap
+    assert cp2.live_slots == cp.live_slots
+    np.testing.assert_array_equal(cp2.prev_active, cp.prev_active)
+    assert cp2.retention.groups == [2]
+    assert cp2.retention.version_of(2) == cp.retention.version_of(2)
+    np.testing.assert_array_equal(cp2.retention.params_of(2)["dev"]["w"],
+                                  cp.retention.params_of(2)["dev"]["w"])
+    np.testing.assert_array_equal(cp2.retention.params_of(2)["aux"]["b"],
+                                  cp.retention.params_of(2)["aux"]["b"])
+
+    # lockstep from the snapshot, through the rejoin round
+    rosters = [np.array([True, True, False]), np.ones(G, bool),
+               np.ones(G, bool)]
+    for roster in rosters:
+        p1 = cp.plan_round(active=roster, produce=produce, reads=reads)
+        p2 = cp2.plan_round(active=roster, produce=produce, reads=reads)
+        np.testing.assert_array_equal(p1.read_slot, p2.read_slot)
+        np.testing.assert_array_equal(p1.write_slot, p2.write_slot)
+        np.testing.assert_array_equal(p1.send_mask, p2.send_mask)
+        np.testing.assert_array_equal(p1.agg_weight, p2.agg_weight)
+        np.testing.assert_array_equal(p1.bcast_mask, p2.bcast_mask)
+        assert p1.retire == p2.retire and p1.restore == p2.restore
+        cp.finish_round(active=roster)
+        cp2.finish_round(active=roster)
+    assert p1.restore == ()                    # no transition in final round
+    assert cp.consumption == cp2.consumption
+
+
 def test_load_state_dict_rejects_policy_mismatch():
     import pytest
     cp = ControlPlane(2, 2, 4, policy="counter")

@@ -1,0 +1,416 @@
+"""RoundExecutor: pipelined dispatch ≡ synchronous loop (window=1, bit for
+bit), host plan/build overlap at window=2, measured straggler profiles,
+per-group state retention for dropped groups, ω-cap RuntimeError."""
+import copy
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.core import fedopt_step as F
+from repro.core.control_plane import ControlPlane
+from repro.core.executor import RoundExecutor, StragglerProfiles
+from repro.launch.mesh import make_debug_mesh
+from repro.runtime.elastic import ElasticRegistry
+
+
+def _setup(omega=1, n_groups=2, H=2):
+    a = registry.smoke_config("smollm-135m")
+    cfg = F.FedStepConfig(arch=a, l_split=1, n_groups=n_groups, seq_len=16,
+                          per_group_batch=2 * H, H=H, omega=omega)
+    mesh = make_debug_mesh(1, 1)
+    jitted, _, s_spec, _ = F.jit_train_step(cfg, mesh, donate=False)
+    state = jax.jit(lambda: F.init_train_state(jax.random.PRNGKey(0), cfg),
+                    out_shardings=s_spec)()
+    return cfg, jitted, state, s_spec
+
+
+def _copy_state(state):
+    return jax.tree.map(jnp.copy, state)
+
+
+def _batch_fn(cfg):
+    def fn(r, plan):
+        batch = F.concrete_train_batch(jax.random.PRNGKey(r), cfg)
+        batch.update(plan.batch_fields())
+        return batch
+    return fn
+
+
+def _executor(cfg, step, s_spec, window, profiles=True, registry_=None):
+    cp = ControlPlane(cfg.n_groups, cfg.omega, cfg.H)
+    return cp, RoundExecutor(
+        step, cp, window=window,
+        profiles=StragglerProfiles(cfg.n_groups) if profiles else None,
+        gather=F.gather_group_state,
+        scatter=lambda st, g, p: F.scatter_group_state(
+            st, g, p, state_shardings=s_spec),
+        registry=registry_)
+
+
+def _reference_sync_loop(cfg, step, state, actives):
+    """The pre-executor run_pod round loop, verbatim semantics."""
+    cp = ControlPlane(cfg.n_groups, cfg.omega, cfg.H)
+    history = []
+    batch_fn = _batch_fn(cfg)
+    for r, active in enumerate(actives):
+        plan = cp.plan_round(active=active)
+        state, metrics = step(state, batch_fn(r, plan))
+        cp.finish_round(active=active)
+        assert cp.within_cap
+        history.append({k: float(v) for k, v in metrics.items()})
+    return state, history
+
+
+# ---------------------------------------------------------------------------
+# determinism: pipelining must not change values
+# ---------------------------------------------------------------------------
+
+def test_window1_bitforbit_matches_synchronous_loop():
+    """Acceptance: executor(window=1) reproduces the synchronous round
+    loop's metrics history and final state bit for bit."""
+    cfg, step, state0, s_spec = _setup(omega=1, n_groups=2, H=2)
+    actives = [np.ones(2, bool)] * 4
+    ref_state, ref_hist = _reference_sync_loop(cfg, step,
+                                               _copy_state(state0), actives)
+    _, ex = _executor(cfg, step, s_spec, window=1)
+    state, hist = ex.run(_copy_state(state0), 0, 4,
+                         active_fn=lambda r: actives[r],
+                         batch_fn=_batch_fn(cfg))
+    assert hist == ref_hist            # exact float equality, round order
+    for la, lb in zip(jax.tree.leaves(ref_state), jax.tree.leaves(state)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_window2_history_values_equal_window1_under_churn():
+    """Metric values are window-invariant (planning never reads device
+    values), including across a drop/rejoin with state retention."""
+    cfg, step, state0, s_spec = _setup(omega=2, n_groups=2, H=2)
+    actives = [np.array([True, True]), np.array([True, False]),
+               np.array([True, False]), np.array([True, True]),
+               np.array([True, True])]
+    results = {}
+    for window in (1, 2):
+        _, ex = _executor(cfg, step, s_spec, window=window)
+        results[window] = ex.run(_copy_state(state0), 0, len(actives),
+                                 active_fn=lambda r: actives[r],
+                                 batch_fn=_batch_fn(cfg))
+    s1, h1 = results[1]
+    s2, h2 = results[2]
+    assert h1 == h2
+    for la, lb in zip(jax.tree.leaves(s1), jax.tree.leaves(s2)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+# ---------------------------------------------------------------------------
+# overlap: window=2 hides host plan/build time behind device execution
+# ---------------------------------------------------------------------------
+
+def test_window2_overlaps_host_batch_build():
+    """Acceptance: with window=2 the host plan/batch-build time is hidden
+    behind device execution — host wall per round strictly below the
+    synchronous (window=1) baseline on the same config."""
+    cfg, step, state0, s_spec = _setup(omega=1, n_groups=2, H=2)
+    batch_fn = _batch_fn(cfg)
+    batch0 = batch_fn(0, ControlPlane(2, 1, 2).plan_round())
+    jax.block_until_ready(step(_copy_state(state0), batch0))   # warm jit
+    t0 = time.perf_counter()
+    jax.block_until_ready(step(_copy_state(state0), batch0))
+    dev_s = time.perf_counter() - t0
+    sleep_s = min(max(0.5 * dev_s, 0.02), 0.25)   # modeled host build cost
+    rounds = 8
+
+    def slow_batch_fn(r, plan):
+        time.sleep(sleep_s)
+        return batch_fn(r, plan)
+
+    walls = {}
+    for window in (1, 2):
+        _, ex = _executor(cfg, step, s_spec, window=window)
+        t0 = time.perf_counter()
+        ex.run(_copy_state(state0), 0, rounds,
+               active_fn=lambda r: np.ones(2, bool), batch_fn=slow_batch_fn)
+        walls[window] = time.perf_counter() - t0
+        if window == 2:
+            assert ex.peak_in_flight == 2
+            assert ex.hidden_host_s > 0.0
+    # saving ≈ rounds * min(sleep, device); demand a third of it
+    margin = 0.25 * rounds * min(sleep_s, dev_s)
+    assert walls[2] < walls[1] - margin, (walls, dev_s, sleep_s)
+
+
+# ---------------------------------------------------------------------------
+# per-group state retention (dropped groups rejoin from their own params)
+# ---------------------------------------------------------------------------
+
+def test_dropped_group_retains_state_and_staleness_on_rejoin():
+    """Acceptance: a group dropped for k rounds keeps its retained dev/aux
+    params unchanged, is NOT resynced by the aggregation broadcast, and
+    rejoins from exactly those params with α reflecting the recorded
+    delay."""
+    cfg, step, state0, s_spec = _setup(omega=1, n_groups=2, H=2)
+    k = 2                                  # dropped rounds
+    actives = [np.array([True, True]), np.array([True, False]),
+               np.array([True, False]), np.array([True, True]),
+               np.array([True, True])]
+    registry_ = ElasticRegistry()
+    for g in range(2):
+        registry_.join(1.0, 1.0)
+    cp, ex = _executor(cfg, step, s_spec, window=1, registry_=registry_)
+    scattered = {}
+    real_scatter = ex.scatter
+
+    def spy_scatter(st, g, p):
+        scattered[g] = p
+        return real_scatter(st, g, p)
+
+    ex.scatter = spy_scatter
+
+    snaps = {}
+    plans = {}
+
+    def on_metrics(r, m, st):
+        plans[r] = st.plan                 # plan is dropped after this hook
+        if 1 in cp.retention:              # snapshot the retained entry
+            snaps[r] = copy.deepcopy(cp.retention.params_of(1))
+
+    state, hist = ex.run(_copy_state(state0), 0, len(actives),
+                         active_fn=lambda r: actives[r],
+                         batch_fn=_batch_fn(cfg), on_metrics=on_metrics)
+
+    # retained while dropped, and UNCHANGED across the drop window
+    assert set(snaps) == {1, 2}
+    for la, lb in zip(jax.tree.leaves(snaps[1]), jax.tree.leaves(snaps[2])):
+        np.testing.assert_array_equal(la, lb)
+    # the rejoin scattered exactly the retained params back
+    assert list(scattered) == [1]
+    for la, lb in zip(jax.tree.leaves(scattered[1]),
+                      jax.tree.leaves(snaps[1])):
+        np.testing.assert_array_equal(la, lb)
+    assert 1 not in cp.retention           # released on rejoin
+    # staleness weight on rejoin reflects the recorded delay: absent for
+    # k rounds -> staleness k -> α = 1/(k+1)
+    rejoin_plan = plans[3]
+    np.testing.assert_allclose(rejoin_plan.agg_weight,
+                               [1.0, 1.0 / (k + 1)], rtol=1e-6)
+    np.testing.assert_array_equal(rejoin_plan.bcast_mask, [1.0, 1.0])
+    assert ex.stats[3].plan is None        # plans are not accumulated
+    # registry mirrored the churn with round timestamps
+    assert registry_.devices[1].absences == 1
+    assert registry_.devices[1].active and registry_.devices[1].joined_at == 3.0
+    assert len(hist) == len(actives)
+
+
+def test_masked_broadcast_keeps_dropped_group_params():
+    """bcast_mask gates Alg. 4 line 20: masked-out groups keep their own
+    params (no resync), while receiving groups sync to the aggregate."""
+    cfg, step, state0, _ = _setup(omega=1, n_groups=2, H=2)
+    batch = F.concrete_train_batch(jax.random.PRNGKey(0), cfg)
+    batch["agg_weight"] = jnp.asarray([1.0, 0.0])
+
+    masked, _ = step(_copy_state(state0),
+                     {**batch, "bcast_mask": jnp.asarray([1.0, 0.0])})
+    resync, _ = step(_copy_state(state0),
+                     {**batch, "bcast_mask": jnp.asarray([1.0, 1.0])})
+    w_m = np.asarray(masked["dev"]["embed"])
+    w_r = np.asarray(resync["dev"]["embed"])
+    # all-ones mask: broadcast resyncs the groups to identical params
+    np.testing.assert_allclose(w_r[0], w_r[1], atol=1e-6)
+    # masked: group 1 kept its own (locally-trained) params
+    assert np.abs(w_m[0] - w_m[1]).max() > 1e-6
+    # the receiving group's params are identical either way
+    np.testing.assert_array_equal(w_m[0], w_r[0])
+
+
+# ---------------------------------------------------------------------------
+# ω-cap violation is a real error (not a strippable assert)
+# ---------------------------------------------------------------------------
+
+def test_cap_violation_raises_runtime_error_with_occupancy():
+    class BrokenPlane(ControlPlane):
+        @property
+        def within_cap(self):
+            return False
+
+    cp = BrokenPlane(2, 1, 2)
+    ex = RoundExecutor(lambda s, b: (s, {"d_loss": 0.0, "s_loss": 0.0}),
+                       cp, window=1)
+    with pytest.raises(RuntimeError, match=r"ring slots.*occupancy"):
+        ex.run(0, 0, 1, active_fn=lambda r: np.ones(2, bool),
+               batch_fn=lambda r, plan: {})
+
+
+def test_executor_rejects_bad_window():
+    cp = ControlPlane(2, 1, 2)
+    with pytest.raises(ValueError, match="window"):
+        RoundExecutor(lambda s, b: (s, {}), cp, window=0)
+
+
+# ---------------------------------------------------------------------------
+# measured straggler profiles
+# ---------------------------------------------------------------------------
+
+def test_profiles_unseeded_patterns_match_placeholders():
+    p = StragglerProfiles(3)
+    assert p.produce(4).all() and p.reads(4).all()
+    cp = ControlPlane(3, 1, 4)
+    planned = cp.plan_round(produce=p.produce(4), reads=p.reads(4))
+    default = ControlPlane(3, 1, 4).plan_round()
+    np.testing.assert_array_equal(planned.send_mask, default.send_mask)
+    np.testing.assert_array_equal(planned.read_slot, default.read_slot)
+
+
+def test_profiles_heterogeneous_produce_and_reads():
+    p = StragglerProfiles(4, step_s=[0.01, 0.02, 0.02, 0.04],
+                          server_s=0.08)
+    produce = p.produce(8)
+    np.testing.assert_array_equal(produce.sum(axis=0), [8, 4, 4, 2])
+    assert produce[:, 0].all()             # fastest emits every iteration
+    # server at half the lockstep cadence (0.04) consumes every other iter
+    assert p.reads(8).sum() == 4
+
+
+def test_profiles_observe_round_keeps_uniform_profile_uniform():
+    """Pod path on a homogeneous mesh: measured-round EMA must never
+    introduce phantom heterogeneity (bit-for-bit compat)."""
+    p = StragglerProfiles(3)
+    for wall in (0.5, 0.3, 0.4):
+        p.observe_round(wall, H=4)
+        assert p.produce(4).all() and p.reads(4).all()
+    assert np.allclose(p.step_s, p.step_s[0])
+
+
+def test_profiles_observe_round_preserves_relative_speeds():
+    p = StragglerProfiles(2, step_s=[0.01, 0.04])
+    p.observe_round(wall_s=0.8, H=4)       # slowest binds: 0.2 per iter
+    np.testing.assert_allclose(p.step_s[1] / p.step_s[0], 4.0, rtol=1e-6)
+    assert p.step_s[1] < 0.04 + 0.25 * 0.2 + 1e-9   # EMA moved toward scale
+
+
+def test_profiles_patterns_invariant_to_wall_clock_noise():
+    """Seeded heterogeneous profiles: observe_round rescales step_s and
+    server_s by the same cadence factor, so the produce/reads patterns
+    are pure functions of the seeds — never of measured wall times (the
+    executor's determinism/window-invariance guarantee)."""
+    seeds = dict(step_s=[0.01, 0.02, 0.04], server_s=0.08)
+    a = StragglerProfiles(3, **seeds)
+    b = StragglerProfiles(3, **seeds)
+    rng = np.random.default_rng(0)
+    for wall_a, wall_b in zip(rng.uniform(0.1, 2.0, 12),
+                              rng.uniform(0.1, 2.0, 12)):
+        a.observe_round(wall_a, H=8)       # two different noisy histories
+        b.observe_round(wall_b, H=8)
+        np.testing.assert_array_equal(a.produce(8), b.produce(8))
+        np.testing.assert_array_equal(a.reads(8), b.reads(8))
+    # and the patterns still reflect the seeded heterogeneity
+    np.testing.assert_array_equal(a.produce(8).sum(axis=0), [8, 4, 2])
+    assert a.reads(8).sum() == 4           # server at half the cadence
+
+
+def test_simulator_measures_straggler_profiles():
+    """The event simulator observes real per-device step/transfer times;
+    the EMAs converge to the cluster's configured heterogeneity and the
+    derived patterns schedule slow devices fewer emissions."""
+    from repro.core.simulation import (SimModel, heterogeneous_cluster,
+                                       simulate_fedoptima)
+    model = SimModel(dev_fwd_flops=1e9, dev_bwd_flops=2e9,
+                     full_fwd_flops=5e9, srv_flops_per_batch=8e9,
+                     act_bytes=1e6, dev_model_bytes=4e6,
+                     full_model_bytes=2e7, batch_size=32)
+    cluster = heterogeneous_cluster(4, speed_groups=(1.0, 2.0, 2.0, 4.0))
+    m = simulate_fedoptima(model, cluster, duration=120.0)
+    prof = m.profiles
+    expected = (model.dev_fwd_flops + model.dev_bwd_flops) / cluster.dev_flops
+    # EMAs converge to the configured heterogeneity (constant event times)
+    np.testing.assert_allclose(prof.step_s, expected, rtol=1e-3)
+    np.testing.assert_allclose(prof.transfer_s,
+                               model.act_bytes / cluster.dev_bw, rtol=1e-3)
+    assert prof.server_s == pytest.approx(
+        model.srv_flops_per_batch / cluster.srv_flops, rel=1e-3)
+    # measured patterns fed into plan_round: the 4x-slower device is
+    # granted about a quarter of the fastest device's emissions (EMA
+    # rounding may land the stride on either side of a floor boundary)
+    H = 8
+    produce = prof.produce(H)
+    assert produce[:, 3].all()
+    assert 1 <= produce[:, 0].sum() <= 3
+    sums = produce.sum(axis=0)
+    assert sums[0] <= sums[1] <= sums[3] and sums[0] <= sums[2] <= sums[3]
+    cp = ControlPlane(4, 2, H)
+    plan = cp.plan_round(produce=produce, reads=prof.reads(H))
+    sends = plan.send_mask.sum(axis=0)
+    assert sends[0] <= sends[3]
+    assert cp.within_cap
+
+
+# ---------------------------------------------------------------------------
+# retention rides the checkpoint store (metadata + extras)
+# ---------------------------------------------------------------------------
+
+def test_retention_rides_checkpoint_extras(tmp_path):
+    import json
+
+    from repro.checkpoint import store
+
+    cp = ControlPlane(3, 2, 4)
+    cp.plan_round(active=np.array([True, True, False]))     # drops group 2
+    params = {"dev": {"w": np.arange(6.0).reshape(2, 3)},
+              "aux": {"b": np.ones(4, np.float32)}}
+    cp.retain_group(2, params)
+    cp.finish_round(active=np.array([True, True, False]))
+
+    sd = cp.state_dict()
+    json.dumps(sd)                         # checkpoint-metadata safe
+    store.save(str(tmp_path), 5, {"x": np.zeros(2)},
+               metadata={"control_plane": sd},
+               extras=cp.retention.arrays())
+
+    meta = store.restore_metadata(str(tmp_path), 5)
+    cp2 = ControlPlane(3, 2, 4)
+    cp2.load_state_dict(meta["control_plane"])
+    assert cp2.retention.groups == [2]
+    assert cp2.retention.version_of(2) == cp.retention.version_of(2)
+    assert cp2.retention.params_of(2) is None      # arrays not yet loaded
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                        cp.retention.arrays())
+    cp2.retention.load_arrays(store.restore_extras(str(tmp_path), 5, like))
+    for la, lb in zip(jax.tree.leaves(cp.retention.params_of(2)),
+                      jax.tree.leaves(cp2.retention.params_of(2))):
+        np.testing.assert_array_equal(la, lb)
+    # restored plane plans the rejoin identically to the original
+    p1 = cp.plan_round(active=np.ones(3, bool))
+    p2 = cp2.plan_round(active=np.ones(3, bool))
+    assert p1.restore == p2.restore == (2,)
+    np.testing.assert_array_equal(p1.agg_weight, p2.agg_weight)
+
+
+def test_rejoin_without_restored_arrays_raises():
+    cp = ControlPlane(2, 1, 2)
+    cp.plan_round(active=np.array([True, False]))
+    cp.retain_group(1, {"dev": np.zeros(2), "aux": np.zeros(2)})
+    sd = cp.state_dict()
+    cp2 = ControlPlane(2, 1, 2)
+    cp2.load_state_dict(sd)                # metadata only, no arrays
+    ex = RoundExecutor(lambda s, b: (s, {"d_loss": 0.0}), cp2, window=1,
+                       gather=lambda s, g: None,
+                       scatter=lambda s, g, p: s)
+    with pytest.raises(RuntimeError, match="extras"):
+        ex.run(0, 0, 1, active_fn=lambda r: np.ones(2, bool),
+               batch_fn=lambda r, plan: {})
+    # the error path must not destroy the retained entry: a fixed-up rerun
+    # (extras loaded) still needs it
+    assert 1 in cp2.retention
+
+
+def test_churn_without_retention_wiring_raises():
+    """The masked broadcast makes unwired churn unsafe (a dropped group
+    would rejoin with phantom-trained params) — the executor refuses."""
+    cp = ControlPlane(2, 1, 2)
+    ex = RoundExecutor(lambda s, b: (s, {"d_loss": 0.0}), cp, window=1)
+    rosters = [np.ones(2, bool), np.array([True, False])]
+    with pytest.raises(RuntimeError, match="gather"):
+        ex.run(0, 0, 2, active_fn=lambda r: rosters[r],
+               batch_fn=lambda r, plan: {})
