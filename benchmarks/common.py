@@ -34,9 +34,11 @@ def bench_duration(default: float, smoke: float = 30.0) -> float:
 def fedoptima_control(cluster: SimCluster, omega: int = OMEGA,
                       **kw) -> ControlPlane:
     """The integrated host control plane for a FedOptima simulation run:
-    per-device flow units so Σ_k |Q_k^act| ≤ ω is the strict Eq. 3 cap.
-    Pass as ``simulate_fedoptima(..., control=...)`` and inspect
-    ``peak_buffered`` / ``consumption`` afterwards."""
+    per-device flow units so Σ_k |Q_k^act| ≤ ω is the strict Eq. 3 cap
+    (pass ``pool_cap=`` to admit against the tiered ω + pool budget
+    instead — the server memory manager's spill tier).  Pass as
+    ``simulate_fedoptima(..., control=...)`` and inspect
+    ``peak_buffered`` / ``consumption`` / ``memory_summary`` afterwards."""
     return ControlPlane.for_sim(cluster.K, omega, **kw)
 
 # device-side / server-side per-batch costs for a VGG-5-like split (batch 32)

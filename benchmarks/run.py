@@ -31,7 +31,7 @@ SUITES = {
 
 
 #: Suites whose durations honor common.SMOKE / bench_duration.
-SMOKE_SUITES = ("idle", "throughput")
+SMOKE_SUITES = ("idle", "throughput", "memory")
 
 
 def main() -> None:

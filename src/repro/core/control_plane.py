@@ -42,8 +42,25 @@ have its dev/aux params gathered into the host :class:`RetentionStore`
 on-mesh (``restore``) before the round is dispatched — the round executor
 (``core/executor.py``) performs the actual transfers.
 
-Knobs: ``omega`` (ring depth / Eq. 3 cap), ``policy`` ("counter" | "fifo"),
-``max_delay`` (D), ``alpha_power`` (staleness exponent).
+Tiered memory (``repro.memory``): with ``pool_cap > 0`` the ω-ring is
+tier 0 of a two-tier store — when every ring slot holds unconsumed
+contributions, ``plan_round`` no longer gates all sends; it plans an
+eviction (policy-chosen victim slot → host spill pool) so the write can
+land, and fills pooled entries back into free slots at the next round
+boundary.  The moves ride the plan as ``spill``/``fill`` lists (slot ↔
+pool-key pairs); the executor performs the actual host↔mesh transfers
+against an :class:`~repro.memory.store.ActivationStore` BEFORE the round
+is dispatched, so every spill reflects pre-round ring content (a slot
+written this round can never be a victim — its content does not exist at
+the boundary).  Flow-control admission runs against the TOTAL tiered
+budget ω + pool_cap, so Σ buffered ≤ (ω + pool_cap) · units is the new
+``within_cap`` invariant; with ``pool_cap == 0`` every path reduces
+bit-for-bit to the hard-ω behavior.
+
+Knobs: ``omega`` (ring depth / Eq. 3 cap), ``pool_cap`` (host spill tier
+depth in slots), ``eviction`` ("share" | "lru", see ``repro.memory``),
+``policy`` ("counter" | "fifo"), ``max_delay`` (D), ``alpha_power``
+(staleness exponent).
 
 The same class also fronts the event simulator (``simulation.py``): there
 the scheduler/flow units are per-device activation batches and the
@@ -57,6 +74,8 @@ from collections import deque
 from dataclasses import dataclass
 
 import numpy as np
+
+from repro.memory.policy import make_eviction_policy
 
 from .aggregator import staleness_weight
 from .flow_control import FlowController
@@ -73,6 +92,10 @@ class RoundPlan:
     bcast_mask: np.ndarray = None   # (G,) float32; None -> all receive
     retire: tuple = ()       # groups that just dropped: gather to retention
     restore: tuple = ()      # rejoining groups: scatter retained state back
+    # tiered-store moves, performed by the executor at the round boundary
+    # (fills BEFORE spills, so the pool never transiently exceeds its cap)
+    fill: tuple = ()         # (pool_key, slot): pool entry -> free ring slot
+    spill: tuple = ()        # (slot, pool_key): evicted ring slot -> pool
 
     def batch_fields(self) -> dict:
         """The plan as jit-step batch fields (see fedopt_step.SCHEDULE_KEYS
@@ -161,20 +184,27 @@ class ControlPlane:
 
     def __init__(self, n_groups: int, omega: int, H: int = 1, *,
                  policy: str = "counter", max_delay: int = 16,
-                 alpha_power: float = 1.0, unit: str = "group"):
+                 alpha_power: float = 1.0, unit: str = "group",
+                 pool_cap: int = 0, eviction: str = "share"):
         if omega < 1 or n_groups < 1:
             raise ValueError(
                 f"need omega >= 1 and n_groups >= 1, got omega={omega}, "
                 f"n_groups={n_groups} (ω is the Eq. 3 activation cap)")
+        if pool_cap < 0:
+            raise ValueError(f"pool_cap must be >= 0, got {pool_cap}")
         assert unit in ("group", "device"), unit
         self.G = n_groups
         self.omega = omega
         self.H = H
         self.max_delay = max_delay
         self.alpha_power = alpha_power
+        self.unit = unit
+        self.pool_cap = pool_cap
+        self.mem_policy = make_eviction_policy(eviction)
         self.scheduler = TaskScheduler(n_groups, policy=policy)
-        budget = omega * n_groups if unit == "group" else omega
-        self.flow = FlowController(omega=budget)
+        per_unit = n_groups if unit == "group" else 1
+        self.flow = FlowController(omega=omega * per_unit,
+                                   pool_cap=pool_cap * per_unit)
         for g in range(n_groups):
             self.flow.register(g)
         self.versions = np.zeros(n_groups, np.int64)   # t_g
@@ -188,6 +218,14 @@ class ControlPlane:
         self._slot_groups = [set() for _ in range(omega)]
         self._next_write = 0
         self._last_read = 0
+        # -- spill tier (pod path; slot granularity) --
+        self._pool: dict[int, tuple] = {}   # pool key -> contributor groups
+        self._next_pool_key = 0
+        self._slot_touch = [0] * omega      # last tick written/filled (LRU)
+        self._tick = 0
+        self.n_spills = 0
+        self.n_fills = 0
+        self.peak_pool = 0                  # peak occupied pool entries
 
     @classmethod
     def for_sim(cls, n_devices: int, omega: int, **kw):
@@ -232,6 +270,17 @@ class ControlPlane:
                         if int(g) in self.retention)
         self.prev_active = active.copy()
 
+        # -- tiered store: round-boundary moves.  Fills first (pooled
+        #    entries return to free ring slots, scheduler-priority order);
+        #    spills are planned lazily by _plan_write when the ring is
+        #    full.  Both are executed host↔mesh BEFORE dispatch, so only
+        #    pre-round ring content may spill (see _spill_for_write).
+        self._tick += 1
+        fill = self._plan_fills()
+        self._round_filled = {s for _, s in fill}
+        self._round_written: set[int] = set()
+        self._round_spills: list[tuple[int, int]] = []
+
         read_slot = np.zeros(H, np.int32)
         write_slot = np.zeros(H, np.int32)
         send_mask = np.zeros((H, G), np.float32)
@@ -247,7 +296,8 @@ class ControlPlane:
                          send_mask=send_mask,
                          agg_weight=self.agg_weights(active),
                          bcast_mask=active.astype(np.float32),
-                         retire=retire, restore=restore)
+                         retire=retire, restore=restore,
+                         fill=fill, spill=tuple(self._round_spills))
 
     def retain_group(self, g: int, params):
         """Hold a dropped group's dev/aux params at its last-synced version
@@ -290,26 +340,32 @@ class ControlPlane:
 
     def _plan_write(self, offer: np.ndarray, mask_row: np.ndarray) -> int:
         """Allocate a free ring slot and grant sends into it.  When every
-        slot still holds unconsumed contributions (buffer full), nobody
-        sends — the write is a masked no-op on the mesh, which is exactly
-        the ω cap."""
-        w = self._free_slot()
-        if w is None:
-            return int(self._next_write)     # all-zero mask row: no-op write
+        slot still holds unconsumed contributions (buffer full) and the
+        spill pool has room, a policy-chosen victim slot is evicted to the
+        host tier so the write can land; only when the TOTAL tiered budget
+        is exhausted does nobody send — the write is then a masked no-op
+        on the mesh, which is exactly the ω + pool_cap cap."""
         # token-holding offering groups ship their rows, least-served first
         # (counter order, so scarcity favors underserved groups — Alg. 3)
-        order = sorted(np.flatnonzero(offer),
-                       key=lambda g: (self.scheduler.counters.get(g, 0), g))
+        order = [int(g) for g in
+                 sorted(np.flatnonzero(offer),
+                        key=lambda g: (self.scheduler.counters.get(g, 0), g))
+                 if self.flow.can_send(g)]
+        w = self._free_slot()
+        if w is None and order:
+            w = self._spill_for_write()      # evict to the host tier
+        if w is None:
+            return int(self._next_write)     # all-zero mask row: no-op write
         for g in order:
-            if not self.flow.can_send(g):
-                continue
             self.flow.mark_sent(g)
             self.flow.on_enqueue(g)          # lockstep: arrival is immediate
-            self.scheduler.put(Message("activation", int(g), content=w))
-            self._slot_groups[w].add(int(g))
+            self.scheduler.put(Message("activation", g, content=w))
+            self._slot_groups[w].add(g)
             mask_row[g] = 1.0
         if self._slot_groups[w]:
             self._next_write = (w + 1) % self.omega
+            self._round_written.add(w)
+            self._slot_touch[w] = self._tick
         self.peak_buffered = max(self.peak_buffered, self.flow.buffered)
         self.peak_live_slots = max(self.peak_live_slots, self.live_slots)
         return w
@@ -320,6 +376,67 @@ class ControlPlane:
             if not self._slot_groups[s]:
                 return s
         return None
+
+    # ------------------------------------------------------------------
+    # tiered store planning (repro.memory; pod path, slot granularity)
+    # ------------------------------------------------------------------
+
+    def _plan_fills(self) -> tuple:
+        """Move pooled entries back into free ring slots at the round
+        boundary, most-scheduler-wanted first (policy ``fill_order``).
+        Re-``put`` each contribution so Alg. 3 can serve it this round."""
+        if not self._pool:
+            return ()
+        free = [s for s in range(self.omega) if not self._slot_groups[s]]
+        if not free:
+            # a stalled full ring is the pool's steady state — skip the
+            # O(pool·G) policy ranking when nothing could be filled anyway
+            return ()
+        order = self.mem_policy.fill_order(
+            list(self._pool), groups_of=lambda k: self._pool[k],
+            share=self.consumption_share)
+        moves = []
+        for key, s in zip(order, free):
+            groups = self._pool.pop(key)
+            self._slot_groups[s] = set(groups)
+            self._slot_touch[s] = self._tick
+            for g in groups:
+                self.scheduler.put(Message("activation", int(g),
+                                           content=int(s)))
+            moves.append((int(key), int(s)))
+            self.n_fills += 1
+        return tuple(moves)
+
+    def _spill_for_write(self) -> int | None:
+        """Evict one live ring slot to the host pool, freeing it for this
+        write.  Victims must hold PRE-round content (the physical spill
+        happens before dispatch): slots written this round are ineligible;
+        slots filled this round are eligible only as a last resort (the
+        executor runs fills before spills, so the round trip is
+        consistent, just wasted bandwidth the policies avoid)."""
+        if len(self._pool) >= self.pool_cap:
+            return None
+        live = [s for s in range(self.omega)
+                if self._slot_groups[s] and s not in self._round_written]
+        candidates = [s for s in live if s not in self._round_filled] or live
+        if not candidates:
+            return None
+        s = self.mem_policy.victim(
+            candidates, groups_of=lambda t: self._slot_groups[t],
+            share=self.consumption_share, touch=self._slot_touch)
+        key = self._next_pool_key
+        self._next_pool_key += 1
+        groups = tuple(sorted(self._slot_groups[s]))
+        # the buffered contributions follow the payload to the host tier:
+        # withdrawn from the scheduler (no consumption counted), re-put on
+        # fill; flow budget stays held — they are still buffered server-side
+        self.scheduler.withdraw_slot(s, groups)
+        self._pool[key] = groups
+        self._slot_groups[s].clear()
+        self._round_spills.append((int(s), int(key)))
+        self.n_spills += 1
+        self.peak_pool = max(self.peak_pool, len(self._pool))
+        return s
 
     # ------------------------------------------------------------------
     # staleness-weighted aggregation bookkeeping (Alg. 4)
@@ -404,13 +521,48 @@ class ControlPlane:
         return self.scheduler.counters.get(g, 0) / max(total, 1)
 
     @property
+    def pool_live(self) -> int:
+        """Occupied host spill-pool entries (pod path)."""
+        return len(self._pool)
+
+    @property
+    def pool_occupancy(self) -> dict:
+        """Pool key -> contributor groups, key order."""
+        return {k: list(self._pool[k]) for k in sorted(self._pool)}
+
+    @property
     def within_cap(self) -> bool:
-        """Σ|Q_act| ≤ ω in flow units AND live ring slots ≤ ω."""
-        return self.flow.within_cap and self.live_slots <= self.omega
+        """Σ|Q_act| ≤ ω + pool_cap in flow units AND live ring slots ≤ ω
+        AND occupied pool entries ≤ pool_cap (the tiered Eq. 3)."""
+        return (self.flow.within_cap and self.live_slots <= self.omega
+                and len(self._pool) <= self.pool_cap)
 
     def note_buffered(self, n: int):
         """Record an externally-observed buffer occupancy (sim path)."""
         self.peak_buffered = max(self.peak_buffered, n)
+
+    def memory_summary(self) -> dict:
+        """JSON-able tier accounting: spill/fill/eviction counts + peaks.
+
+        Pod path counts at SLOT granularity (one spill = one ring slot of
+        all its contributions); the event-simulator path has no ring, so
+        its counts come from the flow controller at unit granularity
+        (one spill = one device activation batch admitted past ω)."""
+        out = {"omega": self.omega, "pool_cap": self.pool_cap,
+               "eviction": self.mem_policy.name,
+               "peak_buffered": int(self.peak_buffered)}
+        if self.unit == "group":
+            # every pod-path spill IS a victim selection, so evictions
+            # is derived, not a second counter to keep in sync
+            out.update(spills=self.n_spills, fills=self.n_fills,
+                       evictions=self.n_spills,
+                       pool_live=len(self._pool),
+                       peak_pool=int(self.peak_pool),
+                       peak_live_slots=int(self.peak_live_slots))
+        else:
+            out.update(spills=self.flow.n_spilled, fills=self.flow.n_filled,
+                       evictions=0)
+        return out
 
     # ------------------------------------------------------------------
     # checkpointing: the host plan must survive restarts together with the
@@ -419,8 +571,13 @@ class ControlPlane:
     # ------------------------------------------------------------------
 
     def state_dict(self) -> dict:
-        """JSON-able snapshot of the planning state (pod path)."""
+        """JSON-able snapshot of the planning state (pod path).  v3: adds
+        the spill-tier bookkeeping (pool occupancy, eviction policy, tier
+        counters); the spilled payloads themselves ride the checkpoint's
+        ``extras.npz`` via the driver's ActivationStore, exactly like the
+        retention params."""
         return {
+            "version_tag": 3,
             "policy": self.scheduler.policy,
             "versions": [int(v) for v in self.versions],
             "version": int(self.version),
@@ -442,6 +599,16 @@ class ControlPlane:
             "peak_live_slots": int(self.peak_live_slots),
             "prev_active": [bool(a) for a in self.prev_active],
             "retention": self.retention.meta_dict(),
+            "pool_cap": int(self.pool_cap),
+            "eviction": self.mem_policy.name,
+            "pool": {str(k): [int(g) for g in gs]
+                     for k, gs in self._pool.items()},
+            "next_pool_key": int(self._next_pool_key),
+            "slot_touch": [int(t) for t in self._slot_touch],
+            "tick": int(self._tick),
+            "n_spills": int(self.n_spills),
+            "n_fills": int(self.n_fills),
+            "peak_pool": int(self.peak_pool),
         }
 
     def load_state_dict(self, sd: dict):
@@ -457,6 +624,20 @@ class ControlPlane:
                 f"snapshot was taken under policy={sd['policy']!r}, this "
                 f"ControlPlane uses {self.scheduler.policy!r}; the arrival "
                 "log is policy-specific — resume with the same --policy")
+        pool = {int(k): tuple(int(g) for g in gs)
+                for k, gs in sd.get("pool", {}).items()}
+        if len(pool) > self.pool_cap:
+            raise ValueError(
+                f"snapshot holds {len(pool)} spilled slots but this "
+                f"ControlPlane has pool_cap={self.pool_cap}; resume with "
+                f"--pool-cap >= {len(pool)}")
+        if pool and sd.get("eviction", self.mem_policy.name) != \
+                self.mem_policy.name:
+            raise ValueError(
+                f"snapshot was taken under eviction={sd['eviction']!r}, "
+                f"this ControlPlane uses {self.mem_policy.name!r}; spill "
+                "plans are policy-specific — resume with the same "
+                "--eviction")
         self.versions[:] = np.asarray(sd["versions"], np.int64)
         self.version = sd["version"]
         self.n_accepted = sd["n_accepted"]
@@ -484,8 +665,22 @@ class ControlPlane:
             # the driver must call retention.load_arrays with the restored
             # tree before any held group can rejoin
             self.retention.load_meta(sd["retention"])
+        # spill-tier bookkeeping (v3; older snapshots have no pool — the
+        # defaults from __init__ already describe an empty tier)
+        self._pool = pool
+        self._next_pool_key = sd.get("next_pool_key", 0)
+        self._slot_touch = [int(t) for t in
+                            sd.get("slot_touch", [0] * self.omega)]
+        self._tick = sd.get("tick", 0)
+        self.n_spills = sd.get("n_spills", 0)
+        self.n_fills = sd.get("n_fills", 0)
+        self.peak_pool = sd.get("peak_pool", len(pool))
         self.flow.inflight_by.clear()
-        self.flow.buffered = sum(len(q) for q in self.scheduler.q_act.values())
+        # pooled contributions still hold flow budget: they are buffered
+        # server-side, just in the host tier rather than scheduler queues
+        self.flow.buffered = sum(
+            len(q) for q in self.scheduler.q_act.values()) + \
+            sum(len(gs) for gs in self._pool.values())
         if "tokens" in sd:
             self.flow.sender_active = {int(g): v
                                        for g, v in sd["tokens"].items()}

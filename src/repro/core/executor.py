@@ -239,13 +239,27 @@ class RoundExecutor:
         ``gather(state, g) -> params`` (host copies) and
         ``scatter(state, g, params) -> state``; see
         ``fedopt_step.gather_group_state`` / ``scatter_group_state``.
+    store / gather_slot / scatter_slot : tiered activation store wiring
+        ``store`` is a ``repro.memory.ActivationStore`` (host spill
+        pool); ``gather_slot(state, s) -> payload`` and
+        ``scatter_slot(state, s, payload) -> state`` move one ring
+        slot host↔mesh (``fedopt_step.gather_act_slot`` /
+        ``scatter_act_slot``).  Planned ``fill``/``spill`` moves run at
+        the round boundary, inside the in-flight window.  Fills and the
+        host-side bookkeeping stay fully async, but a SPILL gathers
+        pre-round ring content, so its ``np.asarray`` synchronizes on
+        the in-flight rounds' act_buf output — a targeted sync on the
+        ring only (model/optimizer state stays in flight), paid once
+        per spill round.  Fills run before spills, so the pool never
+        transiently exceeds its cap.
     registry : ElasticRegistry | None
         Optional roster mirror: drops/rejoins are recorded with the round
         index as the timestamp.
     """
 
     def __init__(self, step, cplane, *, window: int = 1, profiles=None,
-                 gather=None, scatter=None, registry=None):
+                 gather=None, scatter=None, registry=None,
+                 store=None, gather_slot=None, scatter_slot=None):
         if window < 1:
             raise ValueError(f"window must be >= 1, got {window}")
         self.step = step
@@ -255,6 +269,9 @@ class RoundExecutor:
         self.gather = gather
         self.scatter = scatter
         self.registry = registry
+        self.store = store
+        self.gather_slot = gather_slot
+        self.scatter_slot = scatter_slot
         self.stats: list[RoundStats] = []
         self.peak_in_flight = 0
         self.total_host_s = 0.0
@@ -290,6 +307,7 @@ class RoundExecutor:
             plan = self.cplane.plan_round(active=active, produce=produce,
                                           reads=reads)
             state = self._apply_retention(state, plan, r)
+            state = self._apply_memory(state, plan, r)
             t1 = time.perf_counter()
             batch = batch_fn(r, plan)
             t2 = time.perf_counter()
@@ -349,14 +367,37 @@ class RoundExecutor:
                 self.registry.rejoin(g, t=float(r))
         return state
 
+    def _apply_memory(self, state, plan, r: int):
+        """Perform the plan's tiered-store moves (host↔mesh ring-slot
+        transfers) before dispatch.  Fills first — a fill frees the pool
+        entry a same-boundary spill may need — then spills of pre-round
+        ring content into the host pool."""
+        if not (plan.fill or plan.spill):
+            return state
+        if self.store is None or self.gather_slot is None or \
+                self.scatter_slot is None:
+            raise RuntimeError(
+                f"round {r} plans spill/fill moves "
+                f"(fill={plan.fill}, spill={plan.spill}) but this executor "
+                "has no ActivationStore wiring — pass store=/gather_slot=/"
+                "scatter_slot= (fedopt_step.gather_act_slot/"
+                "scatter_act_slot) for runs with pool_cap > 0")
+        for key, s in plan.fill:
+            state = self.scatter_slot(state, s, self.store.fill(key))
+        for s, key in plan.spill:
+            self.store.spill(key, self.gather_slot(state, s))
+        return state
+
     def _check_cap(self, r: int):
         cp = self.cplane
         if not cp.within_cap:
             raise RuntimeError(
-                f"activation cap ω={cp.omega} violated after round {r}: "
-                f"{cp.live_slots}/{cp.omega} live ring slots "
-                f"(occupancy={cp.slot_occupancy}), flow "
-                f"promised={cp.flow.promised} (buffered={cp.flow.buffered}, "
+                f"activation cap ω={cp.omega}+pool={cp.pool_cap} violated "
+                f"after round {r}: {cp.live_slots}/{cp.omega} live ring "
+                f"slots (occupancy={cp.slot_occupancy}), "
+                f"{cp.pool_live}/{cp.pool_cap} pool entries, flow "
+                f"promised={cp.flow.promised} of cap={cp.flow.cap} "
+                f"(buffered={cp.flow.buffered}, "
                 f"inflight={cp.flow.inflight}, "
                 f"tokens={cp.flow.active_tokens})")
 
@@ -420,4 +461,7 @@ class RoundExecutor:
         }
         if self.profiles is not None:
             out["profiles"] = self.profiles.summary()
+        if self.store is not None:
+            out["memory"] = {**self.cplane.memory_summary(),
+                             **self.store.summary()}
         return out

@@ -557,7 +557,9 @@ def make_train_step(cfg: FedStepConfig, par: Parallelism):
 def _quant(x):
     """Per-tensor int8 quantization of the aggregation payload (cross-pod
     model upload compression; see parallel/compression.py for the
-    error-feedback gradient variant)."""
+    error-feedback gradient variant).  Also reused by the tiered
+    activation store (repro.memory.store) for int8 spill encoding of
+    float activation leaves."""
     xf = x.astype(jnp.float32)
     scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
     return jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8), scale
@@ -592,6 +594,37 @@ def jit_train_step(cfg: FedStepConfig, mesh, *, donate: bool = True):
 # ---------------------------------------------------------------------------
 # Per-group state retention (dropped groups — §3.4.2)
 # ---------------------------------------------------------------------------
+
+def gather_act_slot(state: Params, s: int) -> dict:
+    """Host copies of activation-ring slot ``s`` (spill path of the tiered
+    store, ``repro.memory``): one scheduled batch — acts, labels and any
+    tokens/frontend leaves — lifted off the mesh for the host pool.
+
+    Blocks only until the act_buf leaves are materialized: under
+    pipelined dispatch this waits for the rounds already in flight, and
+    only on the ring (one slot's read is sliced host-side), never on the
+    model params."""
+    return jax.tree.map(lambda x: np.asarray(x[s]), state["act_buf"])
+
+
+def scatter_act_slot(state: Params, s: int, payload: dict,
+                     state_shardings=None) -> Params:
+    """Functionally write one spilled slot's payload back into the on-mesh
+    ring (fill path).  ``state_shardings`` (the jit step's state spec
+    dict) re-pins the updated ring so the next dispatch sees the same
+    shardings it was compiled for."""
+    spec = None if state_shardings is None else state_shardings["act_buf"]
+
+    def one(x, v, sh=None):
+        y = x.at[s].set(jnp.asarray(v, x.dtype))
+        return jax.device_put(y, sh) if sh is not None else y
+
+    new = dict(state)
+    new["act_buf"] = jax.tree.map(one, state["act_buf"], payload) \
+        if spec is None else jax.tree.map(one, state["act_buf"], payload,
+                                          spec)
+    return new
+
 
 def gather_group_state(state: Params, g: int) -> dict:
     """Host copies of one group's dev/aux slices for the retention store.

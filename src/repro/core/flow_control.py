@@ -15,6 +15,17 @@ already promised: in-flight sends and granted-but-unused tokens) is below
 Grants are issued round-robin for fairness.  The controller is transport-
 agnostic: the event simulator and the datacenter driver both drive it via
 ``can_send`` / ``mark_sent`` / ``on_enqueue`` / ``on_dequeue``.
+
+Tiered budget (server memory manager, ``repro.memory``): with
+``pool_cap > 0`` the server backs the ω mesh-resident slots with a host
+spill pool, so admission is accounted against the TOTAL tiered budget::
+
+    buffered + inflight + active_tokens <= omega + pool_cap      (always)
+
+``omega`` stays the mesh (tier-0) capacity; admissions beyond it are
+spill-tier residents (counted by ``n_spilled``; ``n_filled`` counts the
+dequeues that promote a spilled unit back toward the mesh tier).  With
+``pool_cap == 0`` behavior is bit-for-bit the strict Eq. 3 controller.
 """
 from __future__ import annotations
 
@@ -24,18 +35,27 @@ from dataclasses import dataclass, field
 
 @dataclass
 class FlowController:
-    omega: int                              # global activation cap ω
+    omega: int                              # mesh-tier activation cap ω
+    pool_cap: int = 0                       # spill-tier budget (flow units)
     sender_active: dict = field(default_factory=dict)   # device -> bool
     buffered: int = 0                       # Σ_k |Q_k^act| (server view)
     inflight_by: dict = field(default_factory=dict)  # device -> in-flight sends
+    n_spilled: int = 0                      # admissions beyond the mesh tier
+    n_filled: int = 0                       # spilled units promoted on dequeue
     # bounded debug log of recent grants (unbounded growth would be the
     # same leak class as the scheduler's arrival log on long runs)
     grants: deque = field(default_factory=lambda: deque(maxlen=256))
     _rr: list = field(default_factory=list)     # round-robin order
 
+    @property
+    def cap(self) -> int:
+        """Total tiered admission budget: mesh ring + host spill pool."""
+        return self.omega + self.pool_cap
+
     def register(self, k: int):
         """New device: sender starts inactive; a token is granted if the
-        cap allows (so at most ω senders are ever simultaneously armed)."""
+        cap allows (so at most ω + pool_cap senders are ever
+        simultaneously armed — exactly ω with the spill tier off)."""
         if k in self.sender_active:
             return
         self.sender_active[k] = False
@@ -72,10 +92,14 @@ class FlowController:
         else:
             self.inflight_by[k] = n - 1
         self.buffered += 1
+        if self.buffered > self.omega:
+            self.n_spilled += 1        # admitted into the spill tier
         self._maybe_grant()
         return True
 
     def on_dequeue(self, k: int):
+        if self.buffered > self.omega:
+            self.n_filled += 1         # a spilled unit moves up a tier
         self.buffered = max(0, self.buffered - 1)
         self._maybe_grant()
 
@@ -107,7 +131,7 @@ class FlowController:
             return
         n = len(self._rr)
         scanned = 0
-        while self.promised < self.omega and scanned < n:
+        while self.promised < self.cap and scanned < n:
             k = self._rr.pop(0)      # true round-robin: a scanned device
             self._rr.append(k)       # moves to the back of the grant queue
             scanned += 1
@@ -118,4 +142,6 @@ class FlowController:
 
     @property
     def within_cap(self) -> bool:
-        return self.buffered <= self.omega and self.promised <= self.omega
+        """Σ buffered (and everything promised) within the TOTAL tiered
+        budget ω + pool_cap; with pool_cap=0 this is the strict Eq. 3 ω."""
+        return self.buffered <= self.cap and self.promised <= self.cap

@@ -128,6 +128,41 @@ class TaskScheduler:
                     break
             self._purge_if_drained(g)
 
+    def withdraw_slot(self, s: Any, groups) -> None:
+        """Spill-tier withdrawal: each listed group's buffered contribution
+        to ring slot ``s`` leaves the scheduler's queues WITHOUT being
+        counted as consumed — the payload moves to the host spill pool and
+        its messages are re-``put`` on fill.  Under FIFO the arrival-log
+        entry retired is the one MATCHING the withdrawn message (a group's
+        arrival entries appear in its queue order, and eviction — unlike
+        consumption — may take a newer message than the group's oldest),
+        so unspilled contributions keep their arrival position; the
+        spill/fill round-trip itself re-enqueues at the back of the
+        arrival order (an approximation the counter policy, which orders
+        by consumption alone, is immune to)."""
+        for g in groups:
+            q = self.q_act.get(g)
+            if not q:
+                continue
+            for idx, m in enumerate(list(q)):
+                if m.content == s:
+                    q.remove(m)
+                    if self.policy == "fifo":
+                        self._drop_arrival(g, idx)
+                    break
+            self._purge_if_drained(g)
+
+    def _drop_arrival(self, g: int, nth: int) -> None:
+        """Delete the (nth+1)-th occurrence of ``g`` from the arrival log
+        (the entry for g's queue position ``nth``)."""
+        seen = 0
+        for j, a in enumerate(self._arrival):
+            if a == g:
+                if seen == nth:
+                    del self._arrival[j]
+                    return
+                seen += 1
+
     # -- introspection --
     @property
     def total_buffered(self) -> int:

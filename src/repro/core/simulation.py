@@ -137,6 +137,7 @@ class Metrics:
 def simulate_fedoptima(model: SimModel, cluster: SimCluster, *,
                        duration: float, omega: int = 8, H: int = 10,
                        max_delay: int = 16, policy: str = "counter",
+                       pool_cap: int = 0,
                        hooks=None, churn=None, seed: int = 0,
                        control: ControlPlane | None = None,
                        profiles: StragglerProfiles | None = None) -> Metrics:
@@ -152,6 +153,11 @@ def simulate_fedoptima(model: SimModel, cluster: SimCluster, *,
         controller and staleness accounting; by default one is built with
         per-device flow units (Eq. 3: Σ_k |Q_k^act| ≤ ω strict).  Passing
         it in lets callers inspect peak buffers / counters afterwards.
+    pool_cap: host spill-tier budget in device activation batches
+        (server memory manager, repro.memory): admission runs against
+        the total tiered budget ω + pool_cap, so up to pool_cap batches
+        beyond the ω mesh tier may buffer (counted by the flow
+        controller's n_spilled/n_filled).  0 = the strict Eq. 3 cap.
     profiles (optional): a StragglerProfiles fed with MEASURED per-device
         iteration/transfer durations and server batch times as they
         complete (EMA).  By default one is created; it is returned on
@@ -164,18 +170,21 @@ def simulate_fedoptima(model: SimModel, cluster: SimCluster, *,
     m = Metrics(K=K, duration=duration)
     if control is not None and \
             (control.G, control.omega, control.flow.omega,
-             control.scheduler.policy, control.max_delay) != \
-            (K, omega, omega, policy, max_delay):
+             control.flow.pool_cap, control.scheduler.policy,
+             control.max_delay) != \
+            (K, omega, omega, pool_cap, policy, max_delay):
         raise ValueError(
             f"supplied ControlPlane (n={control.G}, omega={control.omega}, "
-            f"flow budget={control.flow.omega}, "
+            f"flow budget={control.flow.omega}+{control.flow.pool_cap}, "
             f"policy={control.scheduler.policy!r}, "
             f"max_delay={control.max_delay}) disagrees with the run "
-            f"(n={K}, omega={omega}, policy={policy!r}, "
-            f"max_delay={max_delay}); build it with ControlPlane.for_sim "
-            "so the flow budget is the strict per-device Eq. 3 cap")
+            f"(n={K}, omega={omega}, pool_cap={pool_cap}, "
+            f"policy={policy!r}, max_delay={max_delay}); build it with "
+            "ControlPlane.for_sim so the flow budget is the per-device "
+            "Eq. 3 cap (tiered by pool_cap)")
     cp = control if control is not None else \
-        ControlPlane.for_sim(K, omega, policy=policy, max_delay=max_delay)
+        ControlPlane.for_sim(K, omega, policy=policy, max_delay=max_delay,
+                             pool_cap=pool_cap)
     prof = profiles if profiles is not None else StragglerProfiles(K)
     if prof.G != K:
         raise ValueError(f"profiles track {prof.G} groups, cluster has {K}")

@@ -54,6 +54,7 @@ from repro.core.executor import RoundExecutor, StragglerProfiles
 from repro.data.partitioner import dirichlet_partition
 from repro.data.synthetic import lm_dataset
 from repro.launch.mesh import make_debug_mesh, n_groups_of
+from repro.memory import ActivationStore
 from repro.runtime.elastic import ElasticRegistry
 
 
@@ -104,6 +105,12 @@ def run_pod(args) -> dict:
     omega = getattr(args, "omega", None) or 1
     window = getattr(args, "window", None) or 2
     H = getattr(args, "H", None) or 4
+    # tiered-store knobs (pod default: spill disabled — bit-for-bit the
+    # hard-ω ring; raise --pool-cap to admit past the ring)
+    pool_cap = getattr(args, "pool_cap", None)
+    pool_cap = 0 if pool_cap is None else pool_cap
+    spill_quant = bool(getattr(args, "spill_quant", False))
+    eviction = getattr(args, "eviction", None) or "share"
     cfg = F.FedStepConfig(
         arch=arch, l_split=args.l_split or F.default_l_split(arch),
         n_groups=G, seq_len=args.seq_len, per_group_batch=args.batch,
@@ -113,7 +120,9 @@ def run_pod(args) -> dict:
     jitted, _, s_spec, _ = F.jit_train_step(cfg, mesh, donate=True)
     cplane = ControlPlane(G, omega, cfg.H,
                           policy=getattr(args, "policy", "counter"),
-                          max_delay=getattr(args, "max_delay", 16))
+                          max_delay=getattr(args, "max_delay", 16),
+                          pool_cap=pool_cap, eviction=eviction)
+    act_store = ActivationStore(pool_cap, quant=spill_quant)
 
     like = jax.eval_shape(lambda: F.init_train_state(
         jax.random.PRNGKey(args.seed), cfg))
@@ -133,12 +142,40 @@ def run_pod(args) -> dict:
             # restore the host plan with the ring it describes, or slot
             # occupancy and staleness history silently reset on resume
             cplane.load_state_dict(meta["control_plane"])
-            if len(cplane.retention):
-                # the retained per-group params ride the snapshot's extras
-                slice_like = {
-                    k: jax.tree.map(
+            slice_like = {
+                k: jax.tree.map(
+                    lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype),
+                    like[k]) for k in ("dev", "aux")}
+            if "spill_store" in meta:
+                # v3 layout: extras.npz is namespaced {"retention", "spill"}
+                # — spilled ring slots ride the snapshot next to the
+                # retained per-group params
+                act_store.load_meta(meta["spill_store"])
+                if sorted(cplane.pool_occupancy) != act_store.keys:
+                    raise ValueError(
+                        f"snapshot pool bookkeeping ({sorted(cplane.pool_occupancy)}) "
+                        f"disagrees with its spill store ({act_store.keys})")
+                like_extras, slot_like = {}, None
+                if len(cplane.retention):
+                    like_extras["retention"] = {
+                        str(g): slice_like
+                        for g in cplane.retention.groups}
+                if len(act_store):
+                    slot_like = jax.tree.map(
                         lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype),
-                        like[k]) for k in ("dev", "aux")}
+                        like["act_buf"])
+                    like_extras["spill"] = act_store.like_tree(slot_like)
+                if like_extras:
+                    ex = store.restore_extras(args.ckpt_dir, start_round,
+                                              like_extras)
+                    if "retention" in like_extras:
+                        cplane.retention.load_arrays(ex["retention"])
+                    if "spill" in like_extras:
+                        act_store.load_arrays(
+                            ex["spill"],
+                            dtypes=act_store.slot_dtypes(slot_like))
+            elif len(cplane.retention):
+                # v2 layout: extras.npz holds the retention tree bare
                 cplane.retention.load_arrays(store.restore_extras(
                     args.ckpt_dir, start_round,
                     {str(g): slice_like for g in cplane.retention.groups}))
@@ -168,7 +205,11 @@ def run_pod(args) -> dict:
         gather=F.gather_group_state,
         scatter=lambda st, g, p: F.scatter_group_state(
             st, g, p, state_shardings=s_spec),
-        registry=registry_)
+        registry=registry_,
+        store=act_store,
+        gather_slot=F.gather_act_slot,
+        scatter_slot=lambda st, s, p: F.scatter_act_slot(
+            st, s, p, state_shardings=s_spec))
 
     def active_fn(r):
         active = (rng.random(G) >= args.p_drop).astype(np.float32)
@@ -194,10 +235,17 @@ def run_pod(args) -> dict:
 
     def checkpoint_fn(r, ckpt_state):
         host_state = jax.tree.map(np.asarray, ckpt_state)
-        extras = cplane.retention.arrays()
+        # v3 extras layout: retention params and spilled ring slots ride
+        # the same atomic snapshot under their own namespaces
+        extras = {}
+        if cplane.retention.arrays():
+            extras["retention"] = cplane.retention.arrays()
+        if act_store.arrays():
+            extras["spill"] = act_store.arrays()
         store.save(args.ckpt_dir, r + 1, host_state,
                    metadata={"round": r + 1, "arch": arch.name,
-                             "control_plane": cplane.state_dict()},
+                             "control_plane": cplane.state_dict(),
+                             "spill_store": act_store.meta_dict()},
                    extras=extras or None)
 
     state, history = executor.run(
@@ -205,8 +253,14 @@ def run_pod(args) -> dict:
         active_fn=active_fn, batch_fn=batch_fn, on_metrics=on_metrics,
         checkpoint_every=args.ckpt_every if args.ckpt_dir else 0,
         checkpoint_fn=checkpoint_fn if args.ckpt_dir else None)
+    mem = {**cplane.memory_summary(), **act_store.summary()}
+    print(f"memory: spills {mem['spills']}  fills {mem['fills']}  "
+          f"evictions {mem['evictions']}  peak pool "
+          f"{mem['peak_pool']}/{pool_cap} slots "
+          f"({mem['peak_pool_bytes']/1e6:.1f} MB"
+          f"{', int8 spill' if spill_quant else ''})")
     return {"history": history, "final": history[-1] if history else None,
-            "executor": executor.summary()}
+            "executor": executor.summary(), "memory": mem}
 
 
 # ---------------------------------------------------------------------------
@@ -227,6 +281,10 @@ def run_sim(args) -> dict:
     H = getattr(args, "H", None) or 10
     policy = getattr(args, "policy", "counter")
     max_delay = getattr(args, "max_delay", 16)
+    # sim default pool = ω: the lab testbed showcases the tiered budget
+    # (2ω admission), versus the pod default of 0 (spill off)
+    pool_cap = getattr(args, "pool_cap", None)
+    pool_cap = omega if pool_cap is None else pool_cap
 
     data = classification_dataset(4096, 10, img_size=16, seed=args.seed)
     parts = dirichlet_partition(data.y, args.devices, alpha=0.5,
@@ -243,11 +301,12 @@ def run_sim(args) -> dict:
                          full_model_bytes=4e6, batch_size=32)
     cluster = heterogeneous_cluster(args.devices)
     control = ControlPlane.for_sim(args.devices, omega, policy=policy,
-                                   max_delay=max_delay)
+                                   max_delay=max_delay, pool_cap=pool_cap)
     profiles = StragglerProfiles(args.devices)
     metrics = simulate_fedoptima(sim_model, cluster, duration=args.duration,
                                  omega=omega, H=H, policy=policy,
-                                 max_delay=max_delay, seed=args.seed,
+                                 max_delay=max_delay, pool_cap=pool_cap,
+                                 seed=args.seed,
                                  hooks=learner, control=control,
                                  profiles=profiles)
     xte, yte = data.x[:512], data.y[:512]
@@ -263,12 +322,17 @@ def run_sim(args) -> dict:
     print(f"measured straggler profile: emissions/round "
           f"{produce.sum(axis=0).tolist()} of H={H}, server reads "
           f"{int(reads.sum())}/{H}")
+    mem = control.memory_summary()
+    print(f"memory: tiered budget ω={omega}+pool={pool_cap}, peak buffered "
+          f"{mem['peak_buffered']} batches, spills {mem['spills']}  "
+          f"fills {mem['fills']}")
     return {"accuracy": acc, "srv_idle": metrics.srv_idle_frac,
             "dev_idle": metrics.dev_idle_frac,
             "throughput": metrics.throughput,
             "profiles": profiles.summary(),
             "produce_per_round": produce.sum(axis=0).tolist(),
-            "reads_per_round": int(reads.sum())}
+            "reads_per_round": int(reads.sum()),
+            "memory": mem}
 
 
 def main() -> None:
@@ -291,6 +355,19 @@ def main() -> None:
     p.add_argument("--omega", type=int, default=None,
                    help="activation cap ω (scheduled batches, Eq. 3; pod "
                         "ring default 1, sim default 8)")
+    p.add_argument("--pool-cap", type=int, default=None, dest="pool_cap",
+                   help="host spill-pool depth backing the ω ring (tiered "
+                        "activation store, repro.memory): admission runs "
+                        "against ω + pool_cap.  Pod default 0 (spill off, "
+                        "bit-for-bit the hard-ω ring), sim default ω")
+    p.add_argument("--spill-quant", action="store_true", dest="spill_quant",
+                   help="int8-quantize spilled activation slots (per-tensor"
+                        "; labels/tokens stay exact) — pool bytes / ~4 for "
+                        "a bounded dequantization error on refill")
+    p.add_argument("--eviction", default="share", choices=("share", "lru"),
+                   help="spill-victim policy: 'share' protects least-"
+                        "consumption-share contributions (scheduler-aware)"
+                        ", 'lru' evicts the least-recently-touched slot")
     p.add_argument("--window", type=int, default=2,
                    help="pipelined rounds in flight (pod mode): 1 = "
                         "synchronous host loop, 2 = double-buffered "

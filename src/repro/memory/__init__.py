@@ -1,0 +1,17 @@
+"""Server memory manager: tiered activation store + eviction policies.
+
+The paper's third pillar ("an efficient memory management mechanism on
+the server increases the scalability of the number of participating
+devices") as a subsystem: the on-mesh ω-ring is tier 0 (a cache), a
+host-side spill pool (optionally int8-quantized) is tier 1, and a
+swappable eviction/admission policy decides what lives where.  ω stops
+being a hard correctness ceiling and becomes a performance knob: the
+control plane plans spill/fill moves instead of refusing sends, and the
+flow controller admits against the TOTAL tiered budget ω + pool_cap.
+"""
+from .policy import (ConsumptionShareEviction, LRUEviction, POLICIES,
+                     make_eviction_policy)
+from .store import ActivationStore
+
+__all__ = ["ActivationStore", "ConsumptionShareEviction", "LRUEviction",
+           "POLICIES", "make_eviction_policy"]

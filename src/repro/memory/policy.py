@@ -1,0 +1,83 @@
+"""Eviction/admission policies for the tiered activation store.
+
+When the on-mesh ω-ring is full and a write wants a slot, the control
+plane evicts (spills) one live slot to the host pool; when mesh slots
+free up, pooled entries are filled back.  Which slot to evict and which
+pool entry to fill first is a *policy* decision, decoupled here so the
+trade-off is swappable and benchmarkable:
+
+``lru``
+    Classic recency: evict the ring slot least recently written/filled,
+    fill pool entries oldest-first (FIFO).  Scheduler-oblivious — cheap,
+    but can evict exactly the contribution the Alg. 3 counter policy
+    wants to consume next.
+
+``share`` (default)
+    Scheduler-aware "least-consumption-share" protection: the counter
+    policy (Alg. 3) always serves the *least-consumed* group next, so a
+    slot holding a low-consumption-share contributor is scheduler-hot
+    and must stay on-mesh.  The victim is the slot whose best-priority
+    contributor has the HIGHEST consumption share (its content will be
+    scheduled last); fills promote the pool entry whose contributors
+    have the LOWEST share (the scheduler's next picks) first.
+
+Both policies are pure functions of host bookkeeping (touch ticks,
+consumption counters), so plans stay deterministic and checkpoint-
+resumable.  Ties break on slot id / pool key for run-to-run stability.
+"""
+from __future__ import annotations
+
+
+def _min_share(groups, share) -> float:
+    """Best (lowest) consumption share among a slot's contributors —
+    the Alg. 3 priority of its most-wanted contribution."""
+    return min((share(g) for g in groups), default=float("inf"))
+
+
+class LRUEviction:
+    """Recency policy: evict least-recently-touched, fill oldest-first."""
+
+    name = "lru"
+
+    def victim(self, slots, *, groups_of, share, touch) -> int:
+        return min(slots, key=lambda s: (touch[s], s))
+
+    def fill_order(self, keys, *, groups_of, share) -> list:
+        return sorted(keys)          # pool keys are monotone: FIFO
+
+    def __repr__(self):
+        return f"{type(self).__name__}()"
+
+
+class ConsumptionShareEviction(LRUEviction):
+    """Scheduler-aware policy driven by ``ControlPlane.consumption_share``.
+
+    Evicts the slot whose contributors are already best-served (highest
+    minimum share — the counter policy will schedule them last), keeping
+    least-consumption-share contributions on-mesh; fills restore the
+    most-underserved pool entry first.  Falls back to LRU recency as the
+    tie-break so equal-share slots rotate instead of thrashing.
+    """
+
+    name = "share"
+
+    def victim(self, slots, *, groups_of, share, touch) -> int:
+        return max(slots,
+                   key=lambda s: (_min_share(groups_of(s), share),
+                                  -touch[s], -s))
+
+    def fill_order(self, keys, *, groups_of, share) -> list:
+        return sorted(keys, key=lambda k: (_min_share(groups_of(k), share), k))
+
+
+POLICIES = {p.name: p for p in (LRUEviction, ConsumptionShareEviction)}
+
+
+def make_eviction_policy(name: str):
+    """Build an eviction policy by name ("lru" | "share")."""
+    try:
+        return POLICIES[name]()
+    except KeyError:
+        raise ValueError(
+            f"unknown eviction policy {name!r}; choose from "
+            f"{sorted(POLICIES)}") from None

@@ -1,0 +1,208 @@
+"""Tiered server activation store: the host spill tier behind the ω-ring.
+
+The on-mesh activation ring (``fedopt_step`` ``state["act_buf"]``, ω
+slots) becomes tier 0 — a cache.  :class:`ActivationStore` is tier 1: a
+host-side pool of up to ``pool_cap`` spilled ring slots, optionally
+int8-quantized (per-tensor, reusing the ``_quant``/``_dequant``
+machinery from ``core/fedopt_step.py`` — integer leaves such as labels
+and tokens are stored verbatim; only float activations quantize).
+
+Division of labor: the :class:`~repro.core.control_plane.ControlPlane`
+plans WHICH logical slots move between tiers (``RoundPlan.spill`` /
+``RoundPlan.fill`` + per-entry contributor bookkeeping); this store owns
+the actual host arrays, the byte accounting per tier, and the
+checkpoint riding (``meta_dict``/``arrays`` mirror the RetentionStore
+protocol: JSON metadata in ``tree.json``, payloads in ``extras.npz``).
+The :class:`~repro.core.executor.RoundExecutor` bridges the two, moving
+payloads host↔mesh at round boundaries inside the in-flight window.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def _quant_leaf(x: np.ndarray) -> dict:
+    """Per-tensor int8 spill encoding (fedopt_step's aggregation quant)."""
+    from repro.core.fedopt_step import _quant
+    q, scale = _quant(x)
+    return {"q": np.asarray(q), "scale": np.asarray(scale, np.float32)}
+
+
+def _is_quant_leaf(x) -> bool:
+    return isinstance(x, dict) and set(x) == {"q", "scale"}
+
+
+def _dequant_leaf(e: dict, dtype=np.float32) -> np.ndarray:
+    from repro.core.fedopt_step import _dequant
+    return np.asarray(_dequant((e["q"], e["scale"]))).astype(dtype)
+
+
+def _encode(payload: dict, quant: bool) -> dict:
+    out = {}
+    for k, v in payload.items():
+        v = np.asarray(v)
+        if quant and np.issubdtype(v.dtype, np.floating):
+            out[k] = _quant_leaf(v)
+        else:
+            out[k] = np.array(v, copy=True)
+    return out
+
+
+def _decode(stored: dict, dtypes: dict | None = None) -> dict:
+    out = {}
+    for k, v in stored.items():
+        if _is_quant_leaf(v):
+            out[k] = _dequant_leaf(
+                v, (dtypes or {}).get(k, np.float32))
+        else:
+            out[k] = v
+    return out
+
+
+def _nbytes(tree: dict) -> int:
+    total = 0
+    for v in tree.values():
+        if _is_quant_leaf(v):
+            total += int(v["q"].nbytes) + int(v["scale"].nbytes)
+        else:
+            total += int(np.asarray(v).nbytes)
+    return total
+
+
+class ActivationStore:
+    """Host pool of spilled ring slots, with per-tier byte accounting.
+
+    Entries are keyed by the control plane's monotone pool keys; the
+    stored form is what rides checkpoints (int8 + scale for quantized
+    float leaves — the snapshot stays small), and :meth:`fill`
+    dequantizes on the way back to the mesh.
+    """
+
+    def __init__(self, pool_cap: int, *, quant: bool = False):
+        if pool_cap < 0:
+            raise ValueError(f"pool_cap must be >= 0, got {pool_cap}")
+        self.pool_cap = pool_cap
+        self.quant = quant
+        self._pool: dict[int, dict] = {}   # key -> {"payload", "quant",
+                                           #         "dtypes"}
+        self.n_spills = 0
+        self.n_fills = 0
+        self.pool_bytes = 0
+        self.peak_pool_bytes = 0
+        self.peak_entries = 0
+
+    def __len__(self) -> int:
+        return len(self._pool)
+
+    def __contains__(self, key) -> bool:
+        return int(key) in self._pool
+
+    @property
+    def keys(self) -> list[int]:
+        return sorted(self._pool)
+
+    # ------------------------------------------------------------------
+    # tier transfers
+    # ------------------------------------------------------------------
+
+    def spill(self, key: int, payload: dict) -> None:
+        """Admit one gathered ring slot (a flat dict of host arrays)."""
+        key = int(key)
+        if key in self._pool:
+            raise KeyError(f"pool key {key} already holds a spilled slot")
+        if len(self._pool) >= self.pool_cap:
+            raise RuntimeError(
+                f"spill pool full ({len(self._pool)}/{self.pool_cap} "
+                f"slots): the control plane planned a spill past pool_cap")
+        stored = _encode(payload, self.quant)
+        dtypes = {k: np.asarray(v).dtype for k, v in payload.items()}
+        self._pool[key] = {"payload": stored, "quant": self.quant,
+                           "dtypes": dtypes}
+        self.n_spills += 1
+        self.pool_bytes += _nbytes(stored)
+        self.peak_pool_bytes = max(self.peak_pool_bytes, self.pool_bytes)
+        self.peak_entries = max(self.peak_entries, len(self._pool))
+
+    def fill(self, key: int) -> dict:
+        """Pop one entry, dequantized, ready to scatter back on-mesh."""
+        e = self._pool.pop(int(key))
+        self.n_fills += 1
+        self.pool_bytes -= _nbytes(e["payload"])
+        return _decode(e["payload"], e["dtypes"])
+
+    # ------------------------------------------------------------------
+    # checkpoint riding (RetentionStore protocol)
+    # ------------------------------------------------------------------
+
+    def meta_dict(self) -> dict:
+        """JSON-able part: held keys + per-entry quantization flag."""
+        return {"pool_cap": self.pool_cap, "quant_default": self.quant,
+                "entries": {str(k): {"quant": bool(e["quant"])}
+                            for k, e in self._pool.items()}}
+
+    def load_meta(self, meta: dict) -> None:
+        """Restore held-key metadata; payloads arrive via load_arrays."""
+        entries = meta.get("entries", {})
+        if len(entries) > self.pool_cap:
+            raise ValueError(
+                f"snapshot holds {len(entries)} spilled slots but this "
+                f"store has pool_cap={self.pool_cap}; resume with "
+                f"--pool-cap >= {len(entries)}")
+        self._pool = {int(k): {"payload": None, "quant": bool(e["quant"]),
+                               "dtypes": None}
+                      for k, e in entries.items()}
+        self.pool_bytes = 0
+
+    def arrays(self) -> dict:
+        """Stored (possibly quantized) payloads keyed by pool key — the
+        checkpoint extras payload; empty dict when nothing is held."""
+        return {str(k): e["payload"] for k, e in self._pool.items()}
+
+    def load_arrays(self, tree: dict, dtypes: dict | None = None) -> None:
+        """Restore payloads for held keys (``load_meta`` first).
+        ``dtypes`` optionally maps leaf name -> dtype for dequantized
+        fills (defaults to float32 for quantized leaves)."""
+        for k, payload in tree.items():
+            if int(k) not in self._pool:
+                raise KeyError(
+                    f"spill arrays for pool key {k} have no matching "
+                    "metadata entry — load_meta first")
+            e = self._pool[int(k)]
+            e["payload"] = {name: dict(v) if _is_quant_leaf(v) else
+                            np.asarray(v) for name, v in payload.items()}
+            e["dtypes"] = dict(dtypes) if dtypes else None
+            self.pool_bytes += _nbytes(e["payload"])
+        self.peak_pool_bytes = max(self.peak_pool_bytes, self.pool_bytes)
+        self.peak_entries = max(self.peak_entries, len(self._pool))
+
+    def like_tree(self, slot_like: dict) -> dict:
+        """Restore templates for ``checkpoint.store.restore_extras``:
+        per held key, the stored-form structure (int8 q + scale for
+        quantized float leaves) shaped like one ring slot."""
+        import jax
+
+        def leaf_like(x, quant):
+            sds = jax.ShapeDtypeStruct
+            if quant and np.issubdtype(np.dtype(x.dtype), np.floating):
+                return {"q": sds(x.shape, np.int8),
+                        "scale": sds((), np.float32)}
+            return sds(x.shape, x.dtype)
+
+        return {str(k): {name: leaf_like(x, e["quant"])
+                         for name, x in slot_like.items()}
+                for k, e in self._pool.items()}
+
+    def slot_dtypes(self, slot_like: dict) -> dict:
+        """Leaf-name -> dtype map for :meth:`load_arrays` after restore."""
+        return {name: np.dtype(x.dtype) for name, x in slot_like.items()}
+
+    # ------------------------------------------------------------------
+
+    def summary(self) -> dict:
+        """JSON-able accounting for logs / benchmark records."""
+        return {"pool_cap": self.pool_cap, "spill_quant": self.quant,
+                "pool_entries": len(self._pool),
+                "peak_pool_entries": self.peak_entries,
+                "pool_bytes": int(self.pool_bytes),
+                "peak_pool_bytes": int(self.peak_pool_bytes),
+                "store_spills": self.n_spills, "store_fills": self.n_fills}

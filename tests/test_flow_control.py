@@ -115,3 +115,45 @@ def test_memory_eq3_vs_eq2():
     assert fedoptima[0] == fedoptima[-1]
     assert oafl[-1] > 50 * oafl[0] / 9
     assert fedoptima[-1] < oafl[0]
+
+
+def test_tiered_budget_admits_past_omega_and_counts_tiers():
+    """pool_cap > 0: grants and admission run against ω + pool_cap; units
+    buffered past ω are spill-tier residents (n_spilled), promoted back
+    on dequeue (n_filled).  pool_cap=0 stays the strict Eq. 3 cap."""
+    fc = FlowController(omega=2, pool_cap=3)
+    for k in range(8):
+        fc.register(k)
+    assert fc.cap == 5 and fc.active_tokens == 5      # tokens up to ω+pool
+    senders = [k for k in range(8) if fc.can_send(k)]
+    for k in senders:
+        fc.mark_sent(k)
+        assert fc.on_enqueue(k)
+    assert fc.buffered == 5 > fc.omega                # past the mesh tier
+    assert fc.within_cap and fc.promised == 5
+    assert fc.n_spilled == 3                          # admissions beyond ω
+    for k in senders:
+        fc.on_dequeue(k)
+    assert fc.n_filled == 3 and fc.buffered == 0
+    # regrants resume against the tiered cap
+    assert fc.active_tokens == 5
+
+
+@settings(max_examples=30)
+@given(st.integers(1, 4), st.integers(0, 4), st.integers(1, 12))
+def test_tiered_cap_is_strict_invariant(omega, pool, n_devices):
+    """promised = buffered + inflight + tokens never exceeds ω + pool_cap
+    through a random-ish churn of send/enqueue/dequeue cycles."""
+    fc = FlowController(omega=omega, pool_cap=pool)
+    for k in range(n_devices):
+        fc.register(k)
+    rng = np.random.default_rng(omega * 100 + pool * 10 + n_devices)
+    for _ in range(50):
+        assert fc.promised <= fc.cap and fc.within_cap
+        k = int(rng.integers(n_devices))
+        if fc.can_send(k):
+            fc.mark_sent(k)
+            fc.on_enqueue(k)
+        elif fc.buffered and rng.integers(2):
+            fc.on_dequeue(k)
+    assert fc.within_cap
