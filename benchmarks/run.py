@@ -11,9 +11,9 @@ from __future__ import annotations
 import sys
 
 from . import (bench_ablation_aux, bench_ablation_sched, bench_accuracy,
-               bench_communication, bench_idle, bench_kernels, bench_memory,
-               bench_partition, bench_resilience, bench_roofline,
-               bench_throughput, common)
+               bench_communication, bench_fleet, bench_idle, bench_kernels,
+               bench_memory, bench_partition, bench_resilience,
+               bench_roofline, bench_throughput, common)
 
 SUITES = {
     "communication": bench_communication,   # Fig. 2
@@ -27,11 +27,12 @@ SUITES = {
     "partition": bench_partition,           # Eq. 6-8
     "roofline": bench_roofline,             # §Roofline (deliverable g)
     "kernels": bench_kernels,               # Pallas fwd/bwd vs references
+    "fleet": bench_fleet,                   # shared-trace scenario compare
 }
 
 
 #: Suites whose durations honor common.SMOKE / bench_duration.
-SMOKE_SUITES = ("idle", "throughput", "memory")
+SMOKE_SUITES = ("idle", "throughput", "memory", "fleet")
 
 
 def main() -> None:

@@ -11,10 +11,19 @@ All share the Metrics structure of `simulation.py`, so figures compare
 like-for-like.  Server compute is serialized (single accelerator); links
 are full-duplex.  hooks objects (optional) drive real JAX training in
 event order — see core/learning.py.
+
+Every protocol accepts ``fleet=`` (a ``repro.fleet.FleetTrace``): device
+join/leave and bandwidth follow the trace's tick grid through the single
+trace-event API (``repro.fleet.traces.install_fleet``), so FedOptima and
+all six baselines can be compared under one identical device population.
+Legacy ``churn=`` ChurnModels are materialized onto the same grid
+(``FleetTrace.from_churn`` — identical draws, bit-for-bit).
 """
 from __future__ import annotations
 
 import numpy as np
+
+from repro.fleet.traces import install_fleet, resolve_fleet
 
 from .simulation import Metrics, Sim, SimCluster, SimModel
 
@@ -25,13 +34,16 @@ from .simulation import Metrics, Sim, SimCluster, SimModel
 
 def simulate_classic_fl(model: SimModel, cluster: SimCluster, *,
                         duration: float, H: int = 10, hooks=None,
-                        churn=None, seed: int = 0) -> Metrics:
+                        churn=None, fleet=None, seed: int = 0) -> Metrics:
     sim = Sim()
     K = cluster.K
     m = Metrics(K=K, duration=duration)
     t_iter = [3 * model.full_fwd_flops / cluster.dev_flops[k] for k in range(K)]
+    trace = resolve_fleet(fleet, churn, cluster, duration)
     active = np.ones(K, bool)
     bw = cluster.dev_bw.astype(float).copy()
+    if trace is not None:
+        trace.apply(active, bw)
     pending = {"n": 0}
 
     def start_round():
@@ -66,6 +78,8 @@ def simulate_classic_fl(model: SimModel, cluster: SimCluster, *,
         sim.after(t_iter[k], done)
 
     def arrive(k):
+        if k is not None:
+            m.note_contribution(k)
         pending["n"] -= 1
         if pending["n"] <= 0:
             start = sim.t
@@ -79,51 +93,65 @@ def simulate_classic_fl(model: SimModel, cluster: SimCluster, *,
                 start_round()
             sim.after(dt, agg_done)
 
-    _install_churn(sim, churn, active, bw, K, on_rejoin=None)
+    install_fleet(sim, trace, active, bw)
     start_round()
     sim.run(duration)
     return m
 
 
 def _simulate_async_full(model: SimModel, cluster: SimCluster, *, duration,
-                         H, buffer_size, hooks, churn, seed) -> Metrics:
+                         H, buffer_size, hooks, churn, fleet, seed) -> Metrics:
     """Shared core of FedAsync (buffer_size=1) and FedBuff (buffer_size=Z)."""
     sim = Sim()
     K = cluster.K
     m = Metrics(K=K, duration=duration)
     t_iter = [3 * model.full_fwd_flops / cluster.dev_flops[k] for k in range(K)]
+    trace = resolve_fleet(fleet, churn, cluster, duration)
     active = np.ones(K, bool)
     bw = cluster.dev_bw.astype(float).copy()
+    if trace is not None:
+        trace.apply(active, bw)
     srv = {"busy": False, "buffer": 0}
-    queue: list[int] = []
+    queue: list[tuple] = []          # (device, chain epoch)
+    # per-device chain discipline (same as simulate_fedoptima): a leave
+    # bumps the epoch so the dead chain's pending callbacks can't revive
+    # alongside the chain on_rejoin starts — without it one off->on flap
+    # inside an iteration forks two concurrent chains forever
+    running = np.zeros(K, bool)
+    epoch = np.zeros(K, np.int64)
+
+    def on_leave(k):
+        running[k] = False
+        epoch[k] += 1
 
     def dev_round(k):
-        if not active[k]:
+        if not active[k] or running[k]:
             return
-        dev_train(k, H)
+        running[k] = True
+        dev_train(k, H, epoch[k])
 
-    def dev_train(k, h_left):
-        if not active[k]:
+    def dev_train(k, h_left, e):
+        if not active[k] or epoch[k] != e:
             return
         start = sim.t
 
         def done():
-            if not active[k]:
+            if not active[k] or epoch[k] != e:
                 return
             m.dev_busy[k] += sim.t - start
             m.dev_samples += model.batch_size
             if hooks:
                 hooks.device_iter(k, False)
             if h_left > 1:
-                dev_train(k, h_left - 1)
+                dev_train(k, h_left - 1, e)
             else:
                 tx = model.full_model_bytes / bw[k]
                 m.bytes_up += model.full_model_bytes
-                sim.after(tx, arrive, k)
+                sim.after(tx, arrive, k, e)
         sim.after(t_iter[k], done)
 
-    def arrive(k):
-        queue.append(k)
+    def arrive(k, e):
+        queue.append((k, e))
         srv["buffer"] += 1
         kick()
 
@@ -140,18 +168,27 @@ def _simulate_async_full(model: SimModel, cluster: SimCluster, *, duration,
         def agg_done():
             m.srv_busy += sim.t - start
             m.aggregations += 1
+            for kk, _ in batch:
+                m.note_contribution(kk)
             if hooks:
-                for kk in batch:
+                for kk, _ in batch:
                     hooks.aggregate(kk)
-            for kk in batch:
+            for kk, e in batch:
                 tx = model.full_model_bytes / bw[kk] if active[kk] else 0.0
                 m.bytes_down += model.full_model_bytes if active[kk] else 0.0
-                sim.after(tx, dev_round, kk)
+                sim.after(tx, model_back, kk, e)
             srv["busy"] = False
             kick()
         sim.after(dt, agg_done)
 
-    _install_churn(sim, churn, active, bw, K, on_rejoin=dev_round)
+    def model_back(k, e):
+        if epoch[k] != e:
+            return      # pre-departure round: the live chain owns the device
+        running[k] = False
+        dev_round(k)
+
+    install_fleet(sim, trace, active, bw, on_leave=on_leave,
+                  on_rejoin=dev_round)
     for k in range(K):
         dev_round(k)
     sim.run(duration)
@@ -159,16 +196,18 @@ def _simulate_async_full(model: SimModel, cluster: SimCluster, *, duration,
 
 
 def simulate_fedasync(model, cluster, *, duration, H=10, hooks=None,
-                      churn=None, seed=0) -> Metrics:
+                      churn=None, fleet=None, seed=0) -> Metrics:
     return _simulate_async_full(model, cluster, duration=duration, H=H,
-                                buffer_size=1, hooks=hooks, churn=churn, seed=seed)
+                                buffer_size=1, hooks=hooks, churn=churn,
+                                fleet=fleet, seed=seed)
 
 
 def simulate_fedbuff(model, cluster, *, duration, H=10, buffer_size=None,
-                     hooks=None, churn=None, seed=0) -> Metrics:
+                     hooks=None, churn=None, fleet=None, seed=0) -> Metrics:
     Z = buffer_size or max(2, cluster.K // 4)
     return _simulate_async_full(model, cluster, duration=duration, H=H,
-                                buffer_size=Z, hooks=hooks, churn=churn, seed=seed)
+                                buffer_size=Z, hooks=hooks, churn=churn,
+                                fleet=fleet, seed=seed)
 
 
 # ---------------------------------------------------------------------------
@@ -176,7 +215,8 @@ def simulate_fedbuff(model, cluster, *, duration, H=10, buffer_size=None,
 # ---------------------------------------------------------------------------
 
 def _simulate_split(model: SimModel, cluster: SimCluster, *, duration, H,
-                    sync_agg: bool, pipeline: bool, hooks, churn, seed) -> Metrics:
+                    sync_agg: bool, pipeline: bool, hooks, churn, fleet,
+                    seed) -> Metrics:
     """Split-training protocol: per iteration the device sends activations,
     the server trains that device's server-side model and returns gradients.
 
@@ -187,31 +227,44 @@ def _simulate_split(model: SimModel, cluster: SimCluster, *, duration, H,
     sim = Sim()
     K = cluster.K
     m = Metrics(K=K, duration=duration)
+    trace = resolve_fleet(fleet, churn, cluster, duration)
     active = np.ones(K, bool)
     bw = cluster.dev_bw.astype(float).copy()
+    if trace is not None:
+        trace.apply(active, bw)
     srv = {"busy": False}
     srv_queue: list[tuple] = []
     barrier = {"n": 0}
     t_fwd = [model.dev_fwd_flops / cluster.dev_flops[k] for k in range(K)]
     t_bwd = [model.dev_bwd_flops / cluster.dev_flops[k] for k in range(K)]
+    # chain discipline for the async (OAFL) restart path, mirroring
+    # _simulate_async_full; under sync_agg there is no on_leave so epochs
+    # stay 0 and the guards are inert (the barrier replays old behavior)
+    running = np.zeros(K, bool)
+    epoch = np.zeros(K, np.int64)
+
+    def on_leave(k):
+        running[k] = False
+        epoch[k] += 1
 
     def dev_round(k):
-        if not active[k]:
+        if not active[k] or running[k]:
             return
-        dev_fwd(k, H)
+        running[k] = True
+        dev_fwd(k, H, epoch[k])
 
-    def dev_fwd(k, h_left):
-        if not active[k]:
+    def dev_fwd(k, h_left, e):
+        if not active[k] or epoch[k] != e:
             return
         start = sim.t
 
         def fwd_done():
-            if not active[k]:
+            if not active[k] or epoch[k] != e:
                 return
             m.dev_busy[k] += sim.t - start
             tx = model.act_bytes / bw[k]
             m.bytes_up += model.act_bytes
-            sim.after(tx, srv_request, k, h_left)
+            sim.after(tx, srv_request, k, h_left, e)
             # PiPar: overlap — start next microbatch fwd while waiting
             if pipeline and h_left > 1:
                 start2 = sim.t
@@ -221,39 +274,40 @@ def _simulate_split(model: SimModel, cluster: SimCluster, *, duration, H,
                 sim.after(t_fwd[k], fwd2_done)
         sim.after(t_fwd[k], fwd_done)
 
-    def srv_request(k, h_left):
-        srv_queue.append((k, h_left))
+    def srv_request(k, h_left, e):
+        srv_queue.append((k, h_left, e))
         kick()
 
     def kick():
         if srv["busy"] or not srv_queue:
             return
         srv["busy"] = True
-        k, h_left = srv_queue.pop(0)
+        k, h_left, e = srv_queue.pop(0)
         start = sim.t
         dt = model.srv_flops_per_batch / cluster.srv_flops
 
         def done():
             m.srv_busy += sim.t - start
             m.srv_batches += 1
+            m.note_contribution(k)
             if hooks:
                 hooks.server_train(k)
             tx = model.act_bytes / bw[k] if active[k] else 0.0  # gradients back
             m.bytes_down += model.act_bytes if active[k] else 0.0
-            sim.after(tx, dev_bwd, k, h_left)
+            sim.after(tx, dev_bwd, k, h_left, e)
             srv["busy"] = False
             kick()
         sim.after(dt, done)
 
-    def dev_bwd(k, h_left):
-        if not active[k]:
+    def dev_bwd(k, h_left, e):
+        if not active[k] or epoch[k] != e:
             if sync_agg:
                 barrier_arrive()
             return
         start = sim.t
 
         def bwd_done():
-            if not active[k]:
+            if not active[k] or epoch[k] != e:
                 if sync_agg:
                     barrier_arrive()
                 return
@@ -267,16 +321,16 @@ def _simulate_split(model: SimModel, cluster: SimCluster, *, duration, H,
                     # fwd of next batch already ran; go straight to upload
                     tx = model.act_bytes / bw[k]
                     m.bytes_up += model.act_bytes
-                    sim.after(tx, srv_request, k, h_left - 1)
+                    sim.after(tx, srv_request, k, h_left - 1, e)
                 else:
-                    dev_fwd(k, h_left - 1)
+                    dev_fwd(k, h_left - 1, e)
             else:
                 tx = model.dev_model_bytes / bw[k]
                 m.bytes_up += model.dev_model_bytes
-                sim.after(tx, model_arrive, k)
+                sim.after(tx, model_arrive, k, e)
         sim.after(t_bwd[k], bwd_done)
 
-    def model_arrive(k):
+    def model_arrive(k, e):
         if sync_agg:
             barrier_arrive()
         else:
@@ -291,8 +345,14 @@ def _simulate_split(model: SimModel, cluster: SimCluster, *, duration, H,
                     hooks.aggregate(k)
                 tx = model.dev_model_bytes / bw[k] if active[k] else 0.0
                 m.bytes_down += model.dev_model_bytes if active[k] else 0.0
-                sim.after(tx, dev_round, k)
+                sim.after(tx, model_back, k, e)
             sim.after(dt, agg_done)
+
+    def model_back(k, e):
+        if epoch[k] != e:
+            return      # pre-departure round: the live chain owns the device
+        running[k] = False
+        dev_round(k)
 
     def barrier_arrive():
         barrier["n"] -= 1
@@ -310,6 +370,9 @@ def _simulate_split(model: SimModel, cluster: SimCluster, *, duration, H,
             sim.after(dt, agg_done)
 
     def start_round():
+        # the barrier owns round starts: no chain is outstanding here, so
+        # every roster member begins fresh (running is a per-chain flag)
+        running[:] = False
         expected = [k for k in range(K) if active[k]]
         if not expected:
             sim.after(1.0, start_round)
@@ -320,8 +383,9 @@ def _simulate_split(model: SimModel, cluster: SimCluster, *, duration, H,
             m.bytes_down += model.dev_model_bytes
             sim.after(tx, dev_round, k)
 
-    _install_churn(sim, churn, active, bw, K,
-                   on_rejoin=None if sync_agg else dev_round)
+    install_fleet(sim, trace, active, bw,
+                  on_leave=None if sync_agg else on_leave,
+                  on_rejoin=None if sync_agg else dev_round)
     if sync_agg:
         start_round()
     else:
@@ -332,42 +396,24 @@ def _simulate_split(model: SimModel, cluster: SimCluster, *, duration, H,
 
 
 def simulate_splitfed(model, cluster, *, duration, H=10, hooks=None,
-                      churn=None, seed=0) -> Metrics:
+                      churn=None, fleet=None, seed=0) -> Metrics:
     return _simulate_split(model, cluster, duration=duration, H=H,
                            sync_agg=True, pipeline=False, hooks=hooks,
-                           churn=churn, seed=seed)
+                           churn=churn, fleet=fleet, seed=seed)
 
 
 def simulate_pipar(model, cluster, *, duration, H=10, hooks=None,
-                   churn=None, seed=0) -> Metrics:
+                   churn=None, fleet=None, seed=0) -> Metrics:
     return _simulate_split(model, cluster, duration=duration, H=H,
                            sync_agg=True, pipeline=True, hooks=hooks,
-                           churn=churn, seed=seed)
+                           churn=churn, fleet=fleet, seed=seed)
 
 
 def simulate_oafl(model, cluster, *, duration, H=10, hooks=None,
-                  churn=None, seed=0) -> Metrics:
+                  churn=None, fleet=None, seed=0) -> Metrics:
     return _simulate_split(model, cluster, duration=duration, H=H,
                            sync_agg=False, pipeline=False, hooks=hooks,
-                           churn=churn, seed=seed)
-
-
-# ---------------------------------------------------------------------------
-
-def _install_churn(sim, churn, active, bw, K, on_rejoin):
-    if churn is None:
-        return
-
-    def tick(i):
-        act, new_bw = churn.draw(sim.t)
-        for k in range(K):
-            was = active[k]
-            active[k] = act[k]
-            bw[k] = new_bw[k]
-            if not was and act[k] and on_rejoin is not None:
-                on_rejoin(k)
-        sim.after(churn.interval, tick, i + 1)
-    sim.after(churn.interval, tick, 0)
+                           churn=churn, fleet=fleet, seed=seed)
 
 
 REGISTRY = {

@@ -19,6 +19,11 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from repro.fleet.devices import heterogeneous_cluster  # noqa: F401 re-export
+from repro.fleet.selection import (SelectionContext, balance_summary,
+                                   make_selection_policy)
+from repro.fleet.traces import FleetTrace, install_fleet, resolve_fleet
+
 from .control_plane import ControlPlane
 from .executor import StragglerProfiles
 from .scheduler import Message
@@ -54,16 +59,9 @@ class SimCluster:
         return len(self.dev_flops)
 
 
-def heterogeneous_cluster(K: int, base_flops: float = 5e9,
-                          speed_groups=(1.0, 1.33, 2.67, 3.84),
-                          bw: float = 100e6 / 8, srv_ratio: float = 50.0,
-                          seed: int = 0) -> SimCluster:
-    """Paper Table 3-style cluster: 4 equal-size speed groups; server is
-    srv_ratio× the fastest device."""
-    groups = np.array([speed_groups[i * len(speed_groups) // K] for i in range(K)])
-    return SimCluster(dev_flops=base_flops * groups,
-                      dev_bw=np.full(K, bw),
-                      srv_flops=base_flops * max(speed_groups) * srv_ratio)
+# ``heterogeneous_cluster`` (paper Table 3's 4 equal speed groups) now
+# lives in ``repro.fleet.devices`` as the deterministic special case of
+# tier-sampled fleets; it is re-exported above unchanged.
 
 
 # ---------------------------------------------------------------------------
@@ -105,10 +103,18 @@ class Metrics:
     max_buffered: int = 0         # peak Σ|Q_act| (memory check)
     trace: list = field(default_factory=list)
     profiles: StragglerProfiles = None   # measured per-device EMAs (if kept)
+    dev_consumed: np.ndarray = None      # (K,) per-device contributions the
+                                         # server consumed (activation batches
+                                         # for split methods, model updates
+                                         # for full-model methods)
+    registry: object = None              # ElasticRegistry mirroring trace
+                                         # join/leave events (fleet runs)
 
     def __post_init__(self):
         if self.dev_busy is None:
             self.dev_busy = np.zeros(self.K)
+        if self.dev_consumed is None:
+            self.dev_consumed = np.zeros(self.K, np.int64)
 
     # -- derived --
     @property
@@ -129,6 +135,16 @@ class Metrics:
         rounds = self.dev_samples / total_dataset
         return (self.bytes_up + self.bytes_down) / max(rounds, 1e-9)
 
+    # -- per-device contribution balance (Alg. 3's fairness objective) --
+    def note_contribution(self, k: int):
+        """The server consumed one contribution of device k."""
+        self.dev_consumed[k] += 1
+
+    def contribution_balance(self) -> dict:
+        """Variance / CV / Gini of per-device consumed counts (0-Gini =
+        perfectly balanced contributions across the fleet)."""
+        return balance_summary(self.dev_consumed)
+
 
 # ---------------------------------------------------------------------------
 # FedOptima simulation (paper §3.3, Alg. 1–4, Fig. 1(d))
@@ -138,7 +154,8 @@ def simulate_fedoptima(model: SimModel, cluster: SimCluster, *,
                        duration: float, omega: int = 8, H: int = 10,
                        max_delay: int = 16, policy: str = "counter",
                        pool_cap: int = 0,
-                       hooks=None, churn=None, seed: int = 0,
+                       hooks=None, churn=None, fleet=None, selection=None,
+                       registry=None, seed: int = 0,
                        control: ControlPlane | None = None,
                        profiles: StragglerProfiles | None = None) -> Metrics:
     """Event simulation of FedOptima.
@@ -148,7 +165,27 @@ def simulate_fedoptima(model: SimModel, cluster: SimCluster, *,
                                               if send, its activations ship)
         server_train(k) -> None              (server consumes one batch of k)
         aggregate(k) -> None                 (async aggregation of device k)
-    churn (optional): ChurnModel — devices drop/rejoin, bandwidth re-drawn.
+    churn (optional): legacy ChurnModel — materialized onto the fleet
+        trace grid (same draws, bit-for-bit); mutually exclusive with
+        ``fleet``.
+    fleet (optional): a repro.fleet.FleetTrace driving per-device
+        availability + bandwidth from its tick grid (diurnal windows,
+        Weibull sessions, flaky links, ...).  Row 0 is the initial state;
+        join/leave transitions reclaim flow tokens, purge scheduler
+        counters (§3.4.2 fresh-history rejoin) and are mirrored into an
+        ElasticRegistry (returned on ``Metrics.registry``).  A static
+        always-on trace schedules no events — bit-for-bit the tracefree
+        run.
+    selection (optional): participant-selection policy (repro.fleet:
+        "random" | "refl" | "score", optionally ":fraction", or a
+        SelectionPolicy).  Each trace tick the policy picks a cohort from
+        the available devices — fed the Task Scheduler's Alg. 3
+        consumption counters and the staleness accounting — and only
+        cohort members start rounds; deselected devices finish their
+        in-flight round, then idle.  The default (None, or a
+        full-fraction "random") runs every available device.
+    registry (optional): an ElasticRegistry to mirror trace events into;
+        by default one is created for fleet runs.
     control (optional): a ControlPlane supplying the scheduler, flow
         controller and staleness accounting; by default one is built with
         per-device flow units (Eq. 3: Σ_k |Q_k^act| ≤ ω strict).  Passing
@@ -191,10 +228,43 @@ def simulate_fedoptima(model: SimModel, cluster: SimCluster, *,
     m.profiles = prof
     sched = cp.scheduler
     flow = cp.flow
-    rng = np.random.default_rng(seed)
+
+    trace = resolve_fleet(fleet, churn, cluster, duration)
+    sel = make_selection_policy(selection, seed=seed)
+    if sel is not None and sel.trivial:
+        sel = None        # select-all ≡ no selection (cohort = available)
+    if sel is not None and trace is None:
+        # selection needs a re-draw cadence even over an always-on fleet:
+        # a static identity trace supplies the tick grid (no churn
+        # events), at a duration-derived interval so short runs still
+        # re-draw the cohort (>= 12 ticks; the §6.4 cadence for long runs)
+        trace = FleetTrace.from_cluster(
+            cluster, duration,
+            interval=max(min(600.0, duration / 12.0), 1e-3))
+    reg = registry
+    if reg is None and trace is not None:
+        from repro.runtime.elastic import ElasticRegistry
+        reg = ElasticRegistry()
+    if reg is not None and not reg.devices:
+        for k in range(K):
+            reg.join(float(cluster.dev_flops[k]), float(cluster.dev_bw[k]))
+    m.registry = reg
 
     active = np.ones(K, bool)
     bw = cluster.dev_bw.astype(float).copy()
+    if trace is not None:
+        trace.apply(active, bw)              # row 0: the initial roster
+        for k in np.flatnonzero(~active):
+            flow.on_device_left(int(k))      # reclaim the pre-granted token
+            if reg is not None:
+                reg.leave(int(k), t=0.0)
+    selected = np.ones(K, bool)              # current selection cohort
+    running = np.zeros(K, bool)              # device has a round in flight
+    epoch = np.zeros(K, np.int64)            # bumped per departure: pending
+                                             # callbacks of the pre-leave
+                                             # chain see a stale epoch and
+                                             # die, so a rejoin can never
+                                             # run two chains concurrently
     versions = cp.versions            # local model version t_k
     srv_state = {"busy": False}
 
@@ -203,18 +273,19 @@ def simulate_fedoptima(model: SimModel, cluster: SimCluster, *,
 
     # ---------------- device state machine ----------------
     def device_start_round(k, h_left):
-        if not active[k]:
+        if not active[k] or not selected[k] or running[k]:
             return
-        device_iter(k, h_left)
+        running[k] = True
+        device_iter(k, h_left, epoch[k])
 
-    def device_iter(k, h_left):
-        if not active[k]:
+    def device_iter(k, h_left, e):
+        if not active[k] or epoch[k] != e:
             return
         start = sim.t
-        sim.after(t_iter[k], device_iter_done, k, h_left, start)
+        sim.after(t_iter[k], device_iter_done, k, h_left, start, e)
 
-    def device_iter_done(k, h_left, start):
-        if not active[k]:
+    def device_iter_done(k, h_left, start, e):
+        if not active[k] or epoch[k] != e:
             return
         m.dev_busy[k] += sim.t - start
         m.dev_samples += model.batch_size
@@ -229,12 +300,12 @@ def simulate_fedoptima(model: SimModel, cluster: SimCluster, *,
         if hooks:
             hooks.device_iter(k, send)
         if h_left > 1:
-            device_iter(k, h_left - 1)
+            device_iter(k, h_left - 1, e)
         else:
             # end of round: ship device model for aggregation (Alg. 1 l.13)
             tx = model.dev_model_bytes / bw[k]
             m.bytes_up += model.dev_model_bytes
-            sim.after(tx, model_arrive, k)
+            sim.after(tx, model_arrive, k, e)
 
     def act_arrive(k):
         if not active[k]:
@@ -252,8 +323,10 @@ def simulate_fedoptima(model: SimModel, cluster: SimCluster, *,
         assert flow.within_cap, "flow-control cap violated in simulation"
         kick_server()
 
-    def model_arrive(k):
-        sched.put(Message("model", k, content=versions[k]))
+    def model_arrive(k, e):
+        # the shipping chain's epoch rides the message so the eventual
+        # model_return can tell a pre-departure upload from a live one
+        sched.put(Message("model", k, content=(int(versions[k]), int(e))))
         kick_server()
 
     # ---------------- server engine ----------------
@@ -266,13 +339,14 @@ def simulate_fedoptima(model: SimModel, cluster: SimCluster, *,
         srv_state["busy"] = True
         if msg.kind == "model":
             dt = model.agg_flops / cluster.srv_flops
-            sim.after(dt, server_agg_done, msg.origin, sim.t)
+            sim.after(dt, server_agg_done, msg.origin, sim.t,
+                      msg.content[1])
         else:
             flow.on_dequeue(msg.origin)
             dt = model.srv_flops_per_batch / cluster.srv_flops
             sim.after(dt, server_train_done, msg.origin, sim.t)
 
-    def server_agg_done(k, start):
+    def server_agg_done(k, start, e):
         m.srv_busy += sim.t - start
         m.aggregations += 1
         if cp.aggregate_arrival(k, versions[k]) > 0.0 and hooks:
@@ -280,48 +354,71 @@ def simulate_fedoptima(model: SimModel, cluster: SimCluster, *,
         # return global model to device (Alg. 4 l.20)
         tx = model.dev_model_bytes / bw[k] if active[k] else 0.0
         m.bytes_down += model.dev_model_bytes if active[k] else 0.0
-        sim.after(tx, model_return, k)
+        sim.after(tx, model_return, k, e)
         srv_state["busy"] = False
         kick_server()
 
-    def model_return(k):
+    def model_return(k, e):
         cp.device_synced(k)
-        if active[k]:
-            device_start_round(k, H)
+        if epoch[k] != e:
+            # a pre-departure round's model came back after the device
+            # left (and possibly rejoined with a live chain): syncing is
+            # fine, but this return must not restart the device
+            return
+        running[k] = False
+        device_start_round(k, H)
 
     def server_train_done(k, start):
         m.srv_busy += sim.t - start
         m.srv_batches += 1
+        m.note_contribution(k)
         prof.observe_server(sim.t - start)
         if hooks:
             hooks.server_train(k)
         srv_state["busy"] = False
         kick_server()
 
-    # ---------------- churn ----------------
-    def churn_tick(idx):
-        if churn is None:
-            return
-        act, new_bw = churn.draw(sim.t)
-        for k in range(K):
-            was = active[k]
-            active[k] = act[k]
-            bw[k] = new_bw[k]
-            if not was and act[k]:
-                flow.register(k)
-                device_start_round(k, H)
-            if was and not act[k]:
-                flow.on_device_left(k)
-                # purge the consumption counter (§3.4.2: a rejoin starts
-                # with fresh history); buffered activations still train
-                sched.remove_device(k)
-        sim.after(churn.interval, churn_tick, idx + 1)
+    # ---------------- fleet membership (trace ticks) ----------------
+    def on_leave(k):
+        running[k] = False
+        epoch[k] += 1                 # kill the chain's pending callbacks
+        flow.on_device_left(k)
+        # purge the consumption counter (§3.4.2: a rejoin starts with
+        # fresh history); buffered activations still train
+        sched.remove_device(k)
+        if reg is not None:
+            reg.leave(k, t=sim.t)
+
+    def on_rejoin(k):
+        flow.register(k)
+        if reg is not None:
+            reg.rejoin(k, t=sim.t)
+            reg.set_bandwidth(k, float(bw[k]))
+        device_start_round(k, H)
+
+    def reselect():
+        """Re-draw the participation cohort from the available devices
+        (fed the live Alg. 3 counters + staleness accounting).  Devices
+        leaving the cohort finish their in-flight round, then idle; new
+        cohort members start immediately."""
+        ctx = SelectionContext(t=sim.t, counters=sched.counters,
+                               staleness=cp.version - versions,
+                               capability=cluster.dev_flops)
+        chosen = sel.select(np.flatnonzero(active), ctx)
+        selected[:] = False
+        selected[np.asarray(chosen, int)] = True
+        for k in np.flatnonzero(selected & active & ~running):
+            device_start_round(int(k), H)
 
     # ---------------- go ----------------
-    for k in range(K):
-        device_start_round(k, H)
-    if churn is not None:
-        sim.after(churn.interval, churn_tick, 0)
+    if sel is not None:
+        reselect()
+    else:
+        for k in range(K):
+            device_start_round(k, H)
+    install_fleet(sim, trace, active, bw, on_leave=on_leave,
+                  on_rejoin=on_rejoin,
+                  after_tick=reselect if sel is not None else None)
     sim.run(duration)
     m.duration = duration
     return m

@@ -40,6 +40,7 @@ Examples::
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import jax
@@ -53,9 +54,38 @@ from repro.core.control_plane import ControlPlane
 from repro.core.executor import RoundExecutor, StragglerProfiles
 from repro.data.partitioner import dirichlet_partition
 from repro.data.synthetic import lm_dataset
+from repro.fleet import (FleetTrace, SelectionContext, balance_summary,
+                         make_selection_policy, make_trace, sample_cluster)
 from repro.launch.mesh import make_debug_mesh, n_groups_of
 from repro.memory import ActivationStore
 from repro.runtime.elastic import ElasticRegistry
+
+
+def _fleet_trace(args, K: int, horizon: float, interval: float,
+                 bw=None) -> FleetTrace | None:
+    """Resolve --fleet-trace: a JSON artifact path, or a generator kind
+    (diurnal | weibull | flaky | uniform) seeded by --seed with scenario
+    scales derived from the run horizon.  ``bw`` (scalar or per-device
+    array, e.g. a tier-sampled cluster's dev_bw) sets the generated
+    trace's base bandwidths so --fleet-tiers heterogeneity survives."""
+    spec = getattr(args, "fleet_trace", None)
+    if spec is None:
+        return None
+    if spec.endswith(".json") or os.path.exists(spec):
+        trace = FleetTrace.load(spec)
+        if trace.K != K:
+            raise ValueError(f"--fleet-trace describes {trace.K} devices, "
+                             f"this run has {K}")
+        return trace
+    kw = {}
+    if spec == "diurnal":
+        kw = dict(day=horizon / 2.0, on_frac=0.6)   # two "days" per run
+    elif spec == "weibull":
+        kw = dict(on_scale=horizon / 4.0, off_scale=horizon / 8.0)
+    if bw is not None and spec != "flaky":   # flaky re-draws bw per tick
+        kw["bw"] = bw
+    return make_trace(spec, K, horizon, interval=interval,
+                      seed=args.seed, **kw)
 
 
 # ---------------------------------------------------------------------------
@@ -188,17 +218,39 @@ def run_pod(args) -> dict:
     streams = _group_streams(cfg, seed=args.seed)
     rng = np.random.default_rng(args.seed + start_round)
 
+    # Fleet emulation (repro.fleet): --fleet-trace maps one trace tick to
+    # one round (the pod roster for round r is trace row r, wrapping past
+    # the horizon); --fleet-tiers samples per-group capabilities whose
+    # relative speeds seed the straggler profiles; --selection picks the
+    # participating cohort from each round's available groups, fed the
+    # live Alg. 3 consumption counters + staleness accounting.
+    fleet = _fleet_trace(args, G, horizon=float(max(args.rounds, 1)),
+                         interval=1.0)
+    sel = make_selection_policy(getattr(args, "selection", None),
+                                seed=args.seed)
+    caps = None
+    if getattr(args, "fleet_tiers", None):
+        tier_cluster = sample_cluster(G, args.fleet_tiers, seed=args.seed)
+        caps = np.asarray(tier_cluster.dev_flops, float)
+
     registry_ = ElasticRegistry()
-    for g in range(G):       # one pod "device" per mesh group (nominal rates)
-        registry_.join(flops_per_s=1.0, bandwidth=1.0)
+    for g in range(G):       # one pod "device" per mesh group
+        registry_.join(flops_per_s=float(caps[g]) if caps is not None
+                       else 1.0, bandwidth=1.0)
     # Straggler profiles: the lockstep mesh can only measure the round's
     # absolute scale, so RELATIVE group speeds come from the seeds —
     # programmatic callers inject a cost-model-seeded profile via
-    # args.profiles (e.g. StragglerProfiles.from_sim_model) to activate
-    # straggler-aware produce/reads planning; the unseeded default is
-    # uniform, whose patterns equal the placeholder defaults (that
-    # degeneracy is what keeps homogeneous runs bit-for-bit reproducible).
-    profiles = getattr(args, "profiles", None) or StragglerProfiles(G)
+    # args.profiles (e.g. StragglerProfiles.from_sim_model), and
+    # --fleet-tiers seeds one from the sampled capability mix (step time
+    # inversely proportional to flops) to activate straggler-aware
+    # produce/reads planning; the unseeded default is uniform, whose
+    # patterns equal the placeholder defaults (that degeneracy is what
+    # keeps homogeneous runs bit-for-bit reproducible).
+    profiles = getattr(args, "profiles", None)
+    if profiles is None and caps is not None:
+        profiles = StragglerProfiles(G, step_s=1.0 / caps)
+    if profiles is None:
+        profiles = StragglerProfiles(G)
     executor = RoundExecutor(
         jitted, cplane, window=window,
         profiles=profiles,
@@ -212,10 +264,21 @@ def run_pod(args) -> dict:
             st, s, p, state_shardings=s_spec))
 
     def active_fn(r):
-        active = (rng.random(G) >= args.p_drop).astype(np.float32)
-        if active.sum() == 0:
-            active[rng.integers(0, G)] = 1.0
-        return active.astype(bool)
+        if fleet is not None:
+            roster = fleet.roster(r)
+        else:
+            roster = rng.random(G) >= args.p_drop
+            if not roster.any():
+                roster[rng.integers(0, G)] = True
+        if sel is not None and not sel.trivial and roster.any():
+            ctx = SelectionContext(t=float(r),
+                                   counters=cplane.scheduler.counters,
+                                   staleness=cplane.version - cplane.versions,
+                                   capability=caps)
+            chosen = sel.select(np.flatnonzero(roster), ctx)
+            roster = np.zeros(G, bool)
+            roster[np.asarray(chosen, int)] = True
+        return roster
 
     def batch_fn(r, plan):
         return _make_batch(cfg, streams, rng, plan)
@@ -259,8 +322,20 @@ def run_pod(args) -> dict:
           f"{mem['peak_pool']}/{pool_cap} slots "
           f"({mem['peak_pool_bytes']/1e6:.1f} MB"
           f"{', int8 spill' if spill_quant else ''})")
+    consumed = np.array([cplane.consumption.get(g, 0) for g in range(G)],
+                        np.int64)
+    bal = balance_summary(consumed)
+    print(f"contribution balance: consumed={consumed.tolist()}  "
+          f"gini={bal['gini']:.3f}  cv={bal['cv']:.3f}  "
+          f"participants={bal['participants']}/{G}")
+    if fleet is not None:
+        absences = sum(i.absences for i in registry_.devices.values())
+        print(f"fleet: trace={fleet.meta.get('kind', 'custom')}  "
+              f"roster events={absences}  "
+              f"selection={sel.describe() if sel else 'all'}")
     return {"history": history, "final": history[-1] if history else None,
-            "executor": executor.summary(), "memory": mem}
+            "executor": executor.summary(), "memory": mem,
+            "consumed": consumed.tolist(), "contribution_balance": bal}
 
 
 # ---------------------------------------------------------------------------
@@ -299,14 +374,25 @@ def run_sim(args) -> dict:
                          full_fwd_flops=6e9, srv_flops_per_batch=1.2e10,
                          act_bytes=2e6, dev_model_bytes=1e6,
                          full_model_bytes=4e6, batch_size=32)
-    cluster = heterogeneous_cluster(args.devices)
+    # fleet emulation: --fleet-tiers samples the cluster from a weighted
+    # capability mix (default: the paper's 4 uniform speed groups), and
+    # --fleet-trace/--selection drive availability + cohort choice
+    if getattr(args, "fleet_tiers", None):
+        cluster = sample_cluster(args.devices, args.fleet_tiers,
+                                 seed=args.seed)
+    else:
+        cluster = heterogeneous_cluster(args.devices)
+    fleet = _fleet_trace(args, args.devices, args.duration,
+                         interval=max(args.duration / 12.0, 1.0),
+                         bw=cluster.dev_bw)
     control = ControlPlane.for_sim(args.devices, omega, policy=policy,
                                    max_delay=max_delay, pool_cap=pool_cap)
     profiles = StragglerProfiles(args.devices)
     metrics = simulate_fedoptima(sim_model, cluster, duration=args.duration,
                                  omega=omega, H=H, policy=policy,
                                  max_delay=max_delay, pool_cap=pool_cap,
-                                 seed=args.seed,
+                                 seed=args.seed, fleet=fleet,
+                                 selection=getattr(args, "selection", None),
                                  hooks=learner, control=control,
                                  profiles=profiles)
     xte, yte = data.x[:512], data.y[:512]
@@ -326,13 +412,26 @@ def run_sim(args) -> dict:
     print(f"memory: tiered budget ω={omega}+pool={pool_cap}, peak buffered "
           f"{mem['peak_buffered']} batches, spills {mem['spills']}  "
           f"fills {mem['fills']}")
+    bal = metrics.contribution_balance()
+    print(f"contribution balance: consumed={metrics.dev_consumed.tolist()}  "
+          f"gini={bal['gini']:.3f}  cv={bal['cv']:.3f}  "
+          f"participants={bal['participants']}/{args.devices}")
+    if metrics.registry is not None:
+        absences = sum(i.absences
+                       for i in metrics.registry.devices.values())
+        kind = fleet.meta.get("kind", "custom") if fleet is not None \
+            else "identity"     # selection-only runs get an identity trace
+        print(f"fleet: trace={kind}  roster events={absences}  active now "
+              f"{len(metrics.registry.active_ids)}/{args.devices}")
     return {"accuracy": acc, "srv_idle": metrics.srv_idle_frac,
             "dev_idle": metrics.dev_idle_frac,
             "throughput": metrics.throughput,
             "profiles": profiles.summary(),
             "produce_per_round": produce.sum(axis=0).tolist(),
             "reads_per_round": int(reads.sum()),
-            "memory": mem}
+            "memory": mem,
+            "consumed": metrics.dev_consumed.tolist(),
+            "contribution_balance": bal}
 
 
 def main() -> None:
@@ -385,6 +484,26 @@ def main() -> None:
     p.add_argument("--mesh-model", type=int, default=1)
     p.add_argument("--groups-per-shard", type=int, default=4)
     p.add_argument("--p-drop", type=float, default=0.0)
+    p.add_argument("--fleet-trace", default=None, dest="fleet_trace",
+                   help="device availability trace (repro.fleet): a JSON "
+                        "artifact saved by FleetTrace.save, or a generator "
+                        "kind — diurnal | weibull | flaky | uniform — "
+                        "seeded by --seed.  Sim mode drives join/leave "
+                        "from trace ticks; pod mode maps one tick to one "
+                        "round (trace-driven churn exercises per-group "
+                        "retention end-to-end, superseding --p-drop)")
+    p.add_argument("--fleet-tiers", default=None, dest="fleet_tiers",
+                   help="capability-tier mix for the fleet, e.g. "
+                        "'low,mid,high,premium' or 'low:3,premium:1' "
+                        "(repro.fleet.devices).  Sim mode samples the "
+                        "cluster from it; pod mode seeds the straggler "
+                        "profiles with the sampled relative speeds")
+    p.add_argument("--selection", default=None,
+                   help="participant-selection policy: random | refl | "
+                        "score, optionally ':fraction' (e.g. refl:0.5 "
+                        "runs the most-stale half each tick).  Fed the "
+                        "Alg. 3 consumption counters + staleness "
+                        "accounting; default: every available device")
     p.add_argument("--ckpt-dir", default=None)
     p.add_argument("--ckpt-every", type=int, default=5)
     p.add_argument("--log-every", type=int, default=1)

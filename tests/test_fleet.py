@@ -1,0 +1,419 @@
+"""Fleet emulation plane: trace determinism + JSON artifacts, legacy
+churn= equivalence, the always-on/random-selection bit-for-bit compat
+pin, selection policies, tier sampling, contribution balance, and
+trace-driven churn exercising ControlPlane.RetentionStore (propcheck)."""
+import numpy as np
+import pytest
+
+from repro.core.baselines import simulate_classic_fl, simulate_fedasync
+from repro.core.control_plane import ControlPlane
+from repro.core.executor import RoundExecutor
+from repro.core.simulation import (SimModel, heterogeneous_cluster,
+                                   simulate_fedoptima)
+from repro.fleet import (FleetTrace, SelectionContext, balance_summary,
+                         diurnal_trace, flaky_trace, gini,
+                         make_selection_policy, make_trace, parse_tiers,
+                         sample_cluster, tier_counts, uniform_trace,
+                         weibull_sessions_trace)
+from repro.runtime.fault_tolerance import ChurnModel
+
+from _propcheck import given, settings, strategies as st
+
+MODEL = SimModel(dev_fwd_flops=1e9, dev_bwd_flops=2e9, full_fwd_flops=5e9,
+                 srv_flops_per_batch=8e9, act_bytes=1e6, dev_model_bytes=4e6,
+                 full_model_bytes=2e7, batch_size=32)
+CLUSTER = heterogeneous_cluster(8)
+DUR = 400.0
+
+
+def _nums(m):
+    """Every numeric Metrics field (the bit-for-bit comparison surface)."""
+    return (m.duration, m.dev_busy.tolist(), m.srv_busy, m.bytes_up,
+            m.bytes_down, m.dev_samples, m.srv_batches, m.aggregations,
+            m.rounds, m.max_buffered, m.dev_consumed.tolist())
+
+
+# ---------------------------------------------------------------------------
+# traces: determinism, structure, JSON artifact round-trip
+# ---------------------------------------------------------------------------
+
+def test_generators_deterministic_under_seed():
+    for kind in ("diurnal", "weibull", "flaky"):
+        a = make_trace(kind, 6, 4000.0, interval=200.0, seed=3)
+        b = make_trace(kind, 6, 4000.0, interval=200.0, seed=3)
+        np.testing.assert_array_equal(a.active, b.active)
+        np.testing.assert_array_equal(a.bw, b.bw)
+        c = make_trace(kind, 6, 4000.0, interval=200.0, seed=4)
+        assert not (np.array_equal(a.active, c.active) and
+                    np.array_equal(a.bw, c.bw))
+
+
+def test_trace_json_roundtrip(tmp_path):
+    t = diurnal_trace(5, 6000.0, interval=300.0, day=2000.0, on_frac=0.4,
+                      bw_jitter=0.2, seed=9)
+    path = t.save(str(tmp_path / "trace.json"))
+    t2 = FleetTrace.load(path)
+    np.testing.assert_array_equal(t.active, t2.active)
+    np.testing.assert_array_equal(t.bw, t2.bw)
+    assert t2.meta == t.meta and t2.interval == t.interval
+    with pytest.raises(ValueError, match="format"):
+        FleetTrace.from_json({"format": "nope"})
+
+
+def test_diurnal_windows_are_periodic_and_sized():
+    day, interval = 2400.0, 100.0
+    t = diurnal_trace(16, 2 * day, interval=interval, day=day, on_frac=0.5,
+                      seed=0)
+    per_day = int(day / interval)
+    # each device is on for on_frac of every day, same phase every day
+    np.testing.assert_array_equal(t.active[:per_day], t.active[per_day:])
+    np.testing.assert_allclose(t.active.mean(axis=0), 0.5, atol=1e-9)
+    assert not t.is_static
+
+
+def test_weibull_sessions_alternate_and_flaky_drops():
+    w = weibull_sessions_trace(8, 40000.0, interval=400.0, seed=1)
+    up = w.availability()
+    assert (up > 0).all() and (up < 1).any()     # sessions, not constants
+    f = flaky_trace(8, 10000.0, interval=500.0, p_drop=0.3, seed=2)
+    assert 0.4 < f.availability().mean() < 0.95
+    assert f.bw.min() >= 25e6 / 8 and f.bw.max() <= 50e6 / 8
+    with pytest.raises(ValueError, match="unknown trace kind"):
+        make_trace("lunar", 4, 100.0)
+
+
+def test_trace_wraps_past_horizon_and_validates():
+    t = uniform_trace(3, 1000.0, interval=250.0)
+    assert t.T == 4 and t.is_static
+    np.testing.assert_array_equal(t.roster(7), t.roster(3))
+    with pytest.raises(ValueError, match="matching"):
+        FleetTrace(interval=1.0, active=np.ones((2, 3), bool),
+                   bw=np.ones((2, 2)))
+
+
+# ---------------------------------------------------------------------------
+# compat pins: always-on trace ≡ tracefree, churn= ≡ materialized trace
+# ---------------------------------------------------------------------------
+
+def test_always_on_uniform_fleet_random_selection_bitforbit():
+    """Acceptance pin: an always-on trace over a uniform fleet with
+    selection="random" reproduces today's simulate_fedoptima metrics
+    bit-for-bit (the trace schedules no events, select-all draws no
+    RNG)."""
+    plain = simulate_fedoptima(MODEL, CLUSTER, duration=DUR)
+    trace = FleetTrace.from_cluster(CLUSTER, DUR)
+    fleet = simulate_fedoptima(MODEL, CLUSTER, duration=DUR, fleet=trace,
+                               selection="random")
+    assert _nums(plain) == _nums(fleet)
+    assert fleet.registry is not None          # roster mirrored regardless
+
+
+def test_churn_arg_equals_materialized_fleet_trace():
+    """Legacy churn= is the same run as its FleetTrace.from_churn
+    materialization — identical draws, identical events."""
+    mk = lambda: ChurnModel(n_devices=8, p_drop=0.3, interval=50.0, seed=4)
+    via_churn = simulate_fedoptima(MODEL, CLUSTER, duration=DUR, churn=mk())
+    trace = FleetTrace.from_churn(mk(), DUR, bw0=CLUSTER.dev_bw)
+    via_fleet = simulate_fedoptima(MODEL, CLUSTER, duration=DUR, fleet=trace)
+    assert _nums(via_churn) == _nums(via_fleet)
+
+
+def test_baselines_churn_equals_fleet_and_reject_both():
+    mk = lambda: ChurnModel(n_devices=8, p_drop=0.4, interval=60.0, seed=7)
+    trace = FleetTrace.from_churn(mk(), DUR, bw0=CLUSTER.dev_bw)
+    for fn in (simulate_classic_fl, simulate_fedasync):
+        a = fn(MODEL, CLUSTER, duration=DUR, churn=mk())
+        b = fn(MODEL, CLUSTER, duration=DUR, fleet=trace)
+        assert _nums(a) == _nums(b), fn.__name__
+    with pytest.raises(ValueError, match="not both"):
+        simulate_fedasync(MODEL, CLUSTER, duration=DUR, churn=mk(),
+                          fleet=trace)
+    with pytest.raises(ValueError, match="devices"):
+        simulate_fedasync(MODEL, CLUSTER, duration=DUR,
+                          fleet=uniform_trace(4, DUR))
+
+
+# ---------------------------------------------------------------------------
+# trace-driven membership in the FedOptima simulation
+# ---------------------------------------------------------------------------
+
+def test_trace_churn_keeps_caps_and_mirrors_registry():
+    trace = flaky_trace(8, DUR, interval=40.0, p_drop=0.4, seed=5)
+    cp = ControlPlane.for_sim(8, 4)
+    m = simulate_fedoptima(MODEL, CLUSTER, duration=DUR, omega=4,
+                           fleet=trace, control=cp)
+    assert cp.flow.within_cap and m.max_buffered <= 4
+    assert m.dev_consumed.sum() == m.srv_batches
+    reg = m.registry
+    assert reg is not None
+    assert sum(i.absences for i in reg.devices.values()) > 0
+    final = trace.state_at(DUR)[0]
+    assert [d for d in reg.active_ids] == list(np.flatnonzero(final))
+
+
+def test_straddled_model_upload_cannot_fork_concurrent_chains():
+    """A model upload still in flight across a leave+rejoin must not
+    restart the device when it finally returns (the rejoined chain owns
+    the device): dev_busy can never exceed wall-clock."""
+    from repro.core.simulation import SimCluster
+    model = SimModel(dev_fwd_flops=1e9, dev_bwd_flops=2e9,
+                     full_fwd_flops=5e9, srv_flops_per_batch=8e9,
+                     act_bytes=1e4, dev_model_bytes=6e4,
+                     full_model_bytes=2e7, batch_size=32)
+    cl = SimCluster(dev_flops=np.full(2, 3e9), dev_bw=np.full(2, 1e9),
+                    srv_flops=1e12)
+    active = np.ones((120, 2), bool)
+    active[1, 0] = False            # off for one tick, rejoins the next —
+    bw = np.full((120, 2), 1e9)     # — while its 600s first-round upload
+    bw[0, 0] = 100.0                # (6e4 B / 100 B/s) is still in flight
+    trace = FleetTrace(interval=12.0, active=active, bw=bw)
+    m = simulate_fedoptima(model, cl, duration=1400.0, fleet=trace)
+    assert m.dev_busy[0] <= m.duration + 1e-6
+    assert m.dev_busy[0] > 0.9 * m.duration    # ...but the live chain runs
+
+
+def test_async_baseline_flap_does_not_fork_chains():
+    """A device flapping off->on INSIDE one iteration must not revive the
+    pre-leave chain next to the rejoin-started one (fedasync and OAFL
+    restart devices on rejoin): dev_busy can never exceed wall-clock."""
+    from repro.core.baselines import simulate_oafl
+    from repro.core.simulation import SimCluster
+    cl = SimCluster(dev_flops=np.array([8.3e8]), dev_bw=np.array([1e9]),
+                    srv_flops=1e12)          # one slow device, ~18s/iter
+    active = np.ones((360, 1), bool)
+    active[5, 0] = False                     # off at t=5, back at t=6
+    trace = FleetTrace(interval=1.0, active=active, bw=np.full((360, 1), 1e9))
+    for fn in (simulate_fedasync, simulate_oafl):
+        m = fn(MODEL, cl, duration=360.0, fleet=trace)
+        assert m.dev_busy[0] <= m.duration + 1e-6, fn.__name__
+
+
+def test_offline_at_start_device_stays_idle_until_joined():
+    active = np.zeros((4, 4), bool)
+    active[:, :3] = True          # device 3 off for the whole run
+    trace = FleetTrace(interval=DUR / 4, active=active,
+                       bw=np.full((4, 4), 12.5e6))
+    m = simulate_fedoptima(MODEL, heterogeneous_cluster(4), duration=DUR,
+                           fleet=trace)
+    assert m.dev_busy[3] == 0.0 and m.dev_consumed[3] == 0
+    assert (m.dev_busy[:3] > 0).all()
+
+
+def test_selection_restricts_cohort_in_sim():
+    # horizon shorter than one tick: a single cohort for the whole run
+    trace = FleetTrace.from_cluster(CLUSTER, 30.0, interval=600.0)
+    m = simulate_fedoptima(MODEL, CLUSTER, duration=30.0, fleet=trace,
+                           selection="random:0.25")
+    assert int((m.dev_busy > 0).sum()) == 2    # ceil(0.25 * 8)
+    # over many re-selection ticks the cohort rotates through the fleet
+    m2 = simulate_fedoptima(MODEL, CLUSTER, duration=DUR,
+                            fleet=FleetTrace.from_cluster(CLUSTER, DUR,
+                                                          interval=40.0),
+                            selection="random:0.25")
+    assert int((m2.dev_busy > 0).sum()) > 2
+
+
+# ---------------------------------------------------------------------------
+# selection policies
+# ---------------------------------------------------------------------------
+
+def _ctx(counters=None, staleness=None, capability=None, K=6):
+    return SelectionContext(
+        t=0.0, counters=counters or {},
+        staleness=np.zeros(K) if staleness is None else
+        np.asarray(staleness),
+        capability=capability)
+
+
+def test_make_selection_policy_specs():
+    assert make_selection_policy(None) is None
+    p = make_selection_policy("refl:0.5", seed=3)
+    assert p.name == "refl" and p.fraction == 0.5 and not p.trivial
+    assert make_selection_policy("random").trivial
+    assert make_selection_policy(p) is p
+    with pytest.raises(ValueError, match="unknown selection"):
+        make_selection_policy("greedy")
+    with pytest.raises(ValueError, match="fraction"):
+        make_selection_policy("random:0")
+
+
+def test_random_selection_sizes_and_determinism():
+    p = make_selection_policy("random:0.5", seed=0)
+    avail = np.arange(6)
+    picks = p.select(avail, _ctx())
+    assert len(picks) == 3 and set(picks) <= set(range(6))
+    q = make_selection_policy("random:0.5", seed=0)
+    np.testing.assert_array_equal(picks, q.select(avail, _ctx()))
+    # select-all consumes no RNG: the next draw is seed-fresh
+    r = make_selection_policy("random", seed=0)
+    np.testing.assert_array_equal(r.select(avail, _ctx()), avail)
+
+
+def test_refl_selection_prefers_stale_then_underserved():
+    p = make_selection_policy("refl:0.5")
+    ctx = _ctx(counters={0: 9, 1: 0, 2: 2, 3: 2, 4: 5, 5: 5},
+               staleness=[0, 0, 4, 4, 0, 0])
+    picks = p.select([0, 1, 2, 3, 4, 5], ctx)
+    # most-stale (2, 3) first; third slot goes to the least-consumed (1)
+    np.testing.assert_array_equal(picks, [1, 2, 3])
+
+
+def test_selection_survives_all_devices_off():
+    for spec in ("random:0.5", "refl:0.5", "score:0.5"):
+        p = make_selection_policy(spec)
+        assert len(p.select([], _ctx(K=4, capability=np.ones(4)))) == 0
+    # an all-off tick mid-run must not abort the simulation
+    active = np.ones((4, 4), bool)
+    active[1] = False
+    trace = FleetTrace(interval=DUR / 4, active=active,
+                       bw=np.full((4, 4), 12.5e6))
+    m = simulate_fedoptima(MODEL, heterogeneous_cluster(4), duration=DUR,
+                           fleet=trace, selection="score:0.5")
+    assert m.dev_samples > 0
+
+
+def test_generators_accept_per_device_bandwidth(tmp_path):
+    """Tier-sampled clusters keep their bandwidth heterogeneity through
+    trace generation: bw= takes a (K,) base, jitter multiplies it."""
+    cl = sample_cluster(6, "low:1,premium:1", seed=0)
+    t = diurnal_trace(6, 4000.0, interval=500.0, day=2000.0,
+                      bw=cl.dev_bw, seed=1)
+    np.testing.assert_allclose(t.bw, np.tile(cl.dev_bw, (t.T, 1)))
+    j = diurnal_trace(6, 4000.0, interval=500.0, day=2000.0,
+                      bw=cl.dev_bw, bw_jitter=0.2, seed=1)
+    ratio = j.bw / cl.dev_bw[None, :]
+    assert (ratio >= 0.8).all() and (ratio <= 1.2).all()
+    # per-device bw meta stays a JSON-able artifact
+    j2 = FleetTrace.load(j.save(str(tmp_path / "t.json")))
+    np.testing.assert_array_equal(j.bw, j2.bw)
+    assert j2.meta["bw"] == [float(v) for v in cl.dev_bw]
+
+
+def test_score_selection_weighs_capability_and_balance():
+    p = make_selection_policy("score:0.5")
+    # equal staleness: fast + underserved devices outrank slow + served
+    ctx = _ctx(counters={0: 10, 1: 0, 2: 10, 3: 0},
+               capability=np.array([1e9, 4e9, 4e9, 1e9]), K=4)
+    picks = p.select([0, 1, 2, 3], ctx)
+    np.testing.assert_array_equal(picks, [1, 2])   # fast+fresh, fast
+    # without capability data the balance/staleness terms decide
+    picks = p.select([0, 1, 2, 3], _ctx(counters={0: 10, 1: 0, 2: 10, 3: 0},
+                                        K=4))
+    assert set(picks) == {1, 3}
+
+
+# ---------------------------------------------------------------------------
+# capability tiers
+# ---------------------------------------------------------------------------
+
+def test_parse_tiers_and_counts():
+    pairs = parse_tiers("low:3,premium:1")
+    assert [p.name for p, _ in pairs] == ["low", "premium"]
+    assert tier_counts(8, "low:3,premium:1") == [6, 2]
+    assert sum(tier_counts(7, "low,mid,high")) == 7
+    with pytest.raises(ValueError, match="unknown device tier"):
+        parse_tiers("low,ultra")
+
+
+def test_sample_cluster_deterministic_and_tiered():
+    a = sample_cluster(12, "low:1,premium:1", seed=0)
+    b = sample_cluster(12, "low:1,premium:1", seed=0)
+    np.testing.assert_array_equal(a.dev_flops, b.dev_flops)
+    np.testing.assert_array_equal(a.dev_bw, b.dev_bw)
+    assert a.K == 12
+    # tier layout: first half low, second half premium — ~13x flops apart
+    assert a.dev_flops[6:].mean() > 4 * a.dev_flops[:6].mean()
+    assert a.srv_flops == a.dev_flops.max() * 50.0
+    c = sample_cluster(12, "low:1,premium:1", seed=1)
+    assert not np.array_equal(a.dev_flops, c.dev_flops)
+
+
+def test_heterogeneous_cluster_pinned_values():
+    """The moved helper stays bit-identical to the paper Table 3 layout."""
+    cl = heterogeneous_cluster(8)
+    np.testing.assert_allclose(
+        cl.dev_flops,
+        5e9 * np.array([1.0, 1.0, 1.33, 1.33, 2.67, 2.67, 3.84, 3.84]))
+    np.testing.assert_allclose(cl.dev_bw, np.full(8, 100e6 / 8))
+    np.testing.assert_allclose(cl.srv_flops, 5e9 * 3.84 * 50.0)
+
+
+# ---------------------------------------------------------------------------
+# contribution balance metric
+# ---------------------------------------------------------------------------
+
+def test_balance_summary_and_gini():
+    assert gini([5, 5, 5, 5]) == pytest.approx(0.0)
+    assert gini([0, 0, 0, 12]) == pytest.approx(0.75)
+    assert gini([]) == 0.0 and gini([0, 0]) == 0.0
+    bal = balance_summary([2, 2, 2, 10])
+    assert bal["total"] == 16 and bal["participants"] == 4
+    assert bal["gini"] > 0.2 and bal["cv"] > 0.5
+    skew = simulate_fedoptima(MODEL, CLUSTER, duration=200.0)
+    assert 0.0 <= skew.contribution_balance()["gini"] <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# trace-driven churn hits ControlPlane.RetentionStore (pod path)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10)
+@given(st.integers(1, 4), st.integers(1, 3))
+def test_trace_driven_retention_rejoins_at_recorded_staleness(k_gone, start):
+    """Property (satellite acceptance): a group that leaves for k rounds
+    VIA THE TRACE is retained at departure, its retained params survive
+    the absence unchanged, and it rejoins from exactly those params with
+    α = 1/(k+1) — the executor driving active_fn from trace rosters."""
+    G, rounds = 3, start + k_gone + 2
+    masks = np.ones((rounds, G), bool)
+    masks[start:start + k_gone, 1] = False
+    trace = FleetTrace(interval=1.0, active=masks,
+                       bw=np.ones((rounds, G)))
+
+    cp = ControlPlane(G, 1, 2)
+    state = {"dev": 10.0 * np.arange(G, dtype=float)}
+
+    def step(s, batch):
+        # per-group "training": participants advance by 1 each round; the
+        # masked broadcast means a dropped group's row must NOT matter —
+        # its rejoin value comes from the retention scatter
+        return {"dev": s["dev"] + np.asarray(batch["bcast"])}, {"l": 0.0}
+
+    gathered, scattered, plans = {}, {}, {}
+
+    def spy_gather(s, g):
+        out = {"dev": np.array(s["dev"][g])}
+        gathered.setdefault(g, out)
+        return out
+
+    def spy_scatter(s, g, p):
+        scattered.setdefault(g, p)
+        return {"dev": _with(s["dev"], g, p["dev"])}
+
+    ex = RoundExecutor(step, cp, window=1,
+                       gather=spy_gather, scatter=spy_scatter)
+
+    def on_metrics(r, m, stats):
+        plans[r] = stats.plan
+
+    ex.run(state, 0, rounds,
+           active_fn=lambda r: trace.roster(r),
+           batch_fn=lambda r, plan: {"bcast": plan.bcast_mask},
+           on_metrics=on_metrics)
+
+    rejoin = start + k_gone
+    # retained at departure with the pre-drop value, scattered back intact
+    assert list(gathered) == [1] and list(scattered) == [1]
+    assert gathered[1]["dev"] == pytest.approx(10.0 + start)
+    assert scattered[1]["dev"] == pytest.approx(10.0 + start)
+    assert 1 not in cp.retention               # released on rejoin
+    # α at rejoin reflects the recorded absence: staleness k -> 1/(k+1)
+    np.testing.assert_allclose(
+        plans[rejoin].agg_weight,
+        [1.0, 1.0 / (k_gone + 1), 1.0], rtol=1e-6)
+
+
+def _with(arr, g, val):
+    out = arr.copy()
+    out[g] = val
+    return out
