@@ -87,6 +87,42 @@ def run_executor_overlap(model, cluster, tag, record):
     return rows
 
 
+def run_sanitizer_overhead(model, cluster, tag, record):
+    """Measured cost of ``--sanitize``: the same seeded churn scenario
+    with and without the protocol sanitizer attached.  The sanitizer is
+    read-only, so the two runs must produce identical metrics — asserted
+    here — and the wall-clock ratio pins the overhead instead of guessing
+    it."""
+    from repro.analysis.sanitize import sanitized, suspended
+    from repro.fleet.traces import diurnal_trace
+
+    dur = bench_duration(600.0)
+    trace = diurnal_trace(cluster.K, horizon=dur, interval=dur / 24.0,
+                          day=dur / 2.0, on_frac=0.6, bw=cluster.dev_bw,
+                          bw_jitter=0.3, seed=7)
+    kw = dict(duration=dur, omega=OMEGA, fleet=trace, seed=11)
+    with suspended():        # the plain leg must not see a global sanitizer
+        m_plain, us_plain = timed(simulate_fedoptima, model, cluster, **kw)
+        with sanitized() as san:
+            m_san, us_san = timed(simulate_fedoptima, model, cluster, **kw)
+    same = (m_plain.srv_idle_frac == m_san.srv_idle_frac
+            and m_plain.dev_idle_frac == m_san.dev_idle_frac
+            and m_plain.throughput == m_san.throughput)
+    if not same or san.n_violations:
+        raise RuntimeError(
+            f"sanitizer perturbed the run or found violations: "
+            f"metrics_equal={same}, violations={san.n_violations}")
+    overhead = us_san / max(us_plain, 1e-9)
+    rows = [Row(f"idle/{tag}/sanitizer_overhead", us_san,
+                f"plain_us={us_plain:.1f};overhead_x={overhead:.3f};"
+                f"events={san.n_events};violations=0")]
+    record[f"{tag}_sanitizer"] = {
+        "us_plain": us_plain, "us_sanitized": us_san,
+        "overhead_x": overhead, "events": san.n_events,
+        "violations": san.n_violations, "metrics_equal": same}
+    return rows
+
+
 def main() -> list[Row]:
     record: dict = {"smoke": common.SMOKE, "duration_s": bench_duration(600.0)}
     rows = []
@@ -94,6 +130,7 @@ def main() -> list[Row]:
     rows += run(MOBILENET_SPLIT, testbed_b(), "B_mobilenet", record)
     rows += run(TRANSFORMER6_SPLIT, testbed_a(), "A_transformer6", record)
     rows += run_executor_overlap(VGG5_SPLIT, testbed_a(), "A_vgg5", record)
+    rows += run_sanitizer_overhead(VGG5_SPLIT, testbed_a(), "A_vgg5", record)
     with open(OUT_PATH, "w") as fh:
         json.dump(record, fh, indent=2, sort_keys=True)
     rows.append(Row("idle/json", 0.0, f"wrote={os.path.basename(OUT_PATH)}"))

@@ -5,6 +5,12 @@ table.  Prints ``name,us_per_call,derived`` CSV.
     PYTHONPATH=src python -m benchmarks.run idle comm    # subset
     PYTHONPATH=src python -m benchmarks.run --smoke idle throughput
                                          # CI wiring check (tiny configs)
+
+``--sanitize`` runs every suite under the protocol sanitizer
+(``repro.analysis.sanitize``): control-plane events are invariant-checked
+online and any violation aborts the run.  Default ON under ``--smoke``
+(the CI lane), off at full benchmark scale; ``--no-sanitize`` forces it
+off.  A ``sanitize/<suite>`` row records events checked per suite.
 """
 from __future__ import annotations
 
@@ -41,6 +47,13 @@ def main() -> None:
     if smoke:
         argv.remove("--smoke")
         common.SMOKE = True
+    sanitize = smoke                 # default: on in smoke, off at scale
+    if "--sanitize" in argv:
+        argv.remove("--sanitize")
+        sanitize = True
+    if "--no-sanitize" in argv:
+        argv.remove("--no-sanitize")
+        sanitize = False
     # bare --smoke runs only the smoke-aware suites: the others ignore the
     # flag and would silently run at full cost
     which = argv or (list(SMOKE_SUITES) if smoke else list(SUITES))
@@ -51,8 +64,20 @@ def main() -> None:
     print("name,us_per_call,derived")
     for name in which:
         mod = SUITES[name]
-        for row in mod.main():
-            print(row.csv(), flush=True)
+        if sanitize:
+            from repro.analysis.sanitize import sanitized
+            with sanitized() as san:
+                rows = mod.main()
+            for row in rows:
+                print(row.csv(), flush=True)
+            rep = san.report()
+            print(common.Row(f"sanitize/{name}", 0.0,
+                             f"events={rep['events']};"
+                             f"violations={rep['n_violations']}").csv(),
+                  flush=True)
+        else:
+            for row in mod.main():
+                print(row.csv(), flush=True)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,273 @@
+"""Repo lint: stdlib-``ast`` rules for determinism and kernel hygiene.
+
+Run ``python -m repro.analysis.lint src/`` (exit 0 = clean, 1 = findings).
+Pure stdlib on purpose — no jax import, so the CI lane and editor hooks
+start in milliseconds.
+
+Rules
+-----
+RP001  unseeded-random       no global/unseeded ``np.random.*`` in hot
+                             paths (``core/``, ``fleet/``): every draw
+                             must go through a seeded ``default_rng`` so
+                             sim results replay bit-for-bit.  ``data/``
+                             and ``launch/`` are exempt (allowlist).
+RP002  wallclock             no ``time.time()``/``time.time_ns()`` in hot
+                             paths — simulated time is the only clock
+                             there (``perf_counter`` for intervals is
+                             fine; it never feeds logic).
+RP003  hash-seed             builtin ``hash()`` is salted per process
+                             (PYTHONHASHSEED) and must never derive seeds
+                             or keys; use ``zlib.crc32`` or a Generator.
+RP004  bare-assert           no ``assert`` guarding runtime state in
+                             ``core/`` — asserts vanish under ``-O`` (the
+                             executor's ``_check_cap`` lesson); raise a
+                             typed error with the violating state.
+RP005  blockspec-div         every Pallas ``BlockSpec`` block-shape name
+                             (``block_*``/``chunk*``) must appear in a
+                             ``%`` divisibility check in the same
+                             function — a grid of ``S // block`` silently
+                             drops the ragged tail otherwise.
+RP006  statedict-version     every ``state_dict`` writer must emit an
+                             explicit version key ("version"/
+                             "version_tag"), or restored snapshots can't
+                             be migrated.
+
+A finding can be waived per line with ``# lint: allow-<rule-name>``.
+"""
+from __future__ import annotations
+
+import ast
+import sys
+from dataclasses import dataclass
+from pathlib import Path
+
+__all__ = ["LintError", "RULES", "lint_file", "lint_paths", "main"]
+
+#: path segments in scope for the hot-path rules (RP001/RP002)
+HOT_SEGMENTS = ("core", "fleet")
+#: path segments exempt from the hot-path rules even when nested oddly
+EXEMPT_SEGMENTS = ("data", "launch", "configs", "tests")
+
+#: legacy module-level numpy RNG entry points (global hidden state) plus
+#: the argless ``default_rng()`` — both unreproducible
+_NP_GLOBAL_RNG = frozenset({
+    "rand", "randn", "randint", "random", "random_sample", "ranf",
+    "sample", "choice", "shuffle", "permutation", "uniform", "normal",
+    "standard_normal", "beta", "binomial", "exponential", "gamma",
+    "poisson", "seed", "get_state", "set_state", "bytes",
+})
+
+#: BlockSpec shape names that denote a tile size (divisibility hazards);
+#: full-dimension names (hd, N, P, ...) tile trivially and are ignored
+_BLOCK_NAME_PREFIXES = ("block", "chunk")
+
+
+@dataclass(frozen=True)
+class LintError:
+    path: str
+    line: int
+    rule: str          # "RP001"
+    name: str          # "unseeded-random"
+    message: str
+
+    def __str__(self) -> str:
+        return (f"{self.path}:{self.line}: {self.rule}[{self.name}] "
+                f"{self.message}")
+
+
+RULES = {
+    "RP001": "unseeded-random",
+    "RP002": "wallclock",
+    "RP003": "hash-seed",
+    "RP004": "bare-assert",
+    "RP005": "blockspec-div",
+    "RP006": "statedict-version",
+}
+
+
+def _segments(path: Path) -> tuple:
+    return tuple(p.lower() for p in path.parts)
+
+
+def _in_hot_path(path: Path) -> bool:
+    segs = _segments(path)
+    return any(s in segs for s in HOT_SEGMENTS) and \
+        not any(s in segs for s in EXEMPT_SEGMENTS)
+
+
+def _is_np_random_attr(node: ast.AST) -> str | None:
+    """``np.random.X`` / ``numpy.random.X`` -> "X", else None."""
+    if not (isinstance(node, ast.Attribute)
+            and isinstance(node.value, ast.Attribute)
+            and node.value.attr == "random"
+            and isinstance(node.value.value, ast.Name)
+            and node.value.value.id in ("np", "numpy")):
+        return None
+    return node.attr
+
+
+def _names_in(node: ast.AST):
+    for n in ast.walk(node):
+        if isinstance(n, ast.Name):
+            yield n.id
+
+
+class _Pass(ast.NodeVisitor):
+    """One file's lint pass.  Tracks the innermost enclosing function so
+    RP005/RP006 can attribute expressions to their kernel wrapper."""
+
+    def __init__(self, path: Path, rel: str, lines: list[str]):
+        self.path = path
+        self.rel = rel
+        self.lines = lines
+        self.hot = _in_hot_path(path)
+        self.core = "core" in _segments(path) and \
+            not any(s in _segments(path) for s in EXEMPT_SEGMENTS)
+        self.errors: list[LintError] = []
+        self._func_stack: list[dict] = []
+
+    # -- helpers ---------------------------------------------------------
+    def _waived(self, line: int, rule_name: str) -> bool:
+        if 1 <= line <= len(self.lines):
+            return f"# lint: allow-{rule_name}" in self.lines[line - 1]
+        return False
+
+    def _err(self, node: ast.AST, rule: str, message: str):
+        name = RULES[rule]
+        if not self._waived(node.lineno, name):
+            self.errors.append(LintError(self.rel, node.lineno, rule,
+                                         name, message))
+
+    # -- function context (RP005 / RP006) --------------------------------
+    def visit_FunctionDef(self, node: ast.FunctionDef):
+        self._visit_func(node)
+
+    def visit_AsyncFunctionDef(self, node: ast.AsyncFunctionDef):
+        self._visit_func(node)
+
+    def _visit_func(self, node):
+        ctx = {"node": node, "blockspecs": [], "mod_names": set()}
+        self._func_stack.append(ctx)
+        self.generic_visit(node)
+        self._func_stack.pop()
+        # RP005: every tile-size name used in a BlockSpec shape needs a
+        # divisibility (%) check somewhere in the same function
+        for call, names in ctx["blockspecs"]:
+            missing = sorted(n for n in names
+                             if n not in ctx["mod_names"])
+            if missing:
+                self._err(call, "RP005",
+                          f"BlockSpec tile size(s) {', '.join(missing)} "
+                          "have no divisibility check (no '%' test) in "
+                          f"'{node.name}'; a grid of dim // block "
+                          "silently drops the ragged tail")
+        # RP006: state_dict writers carry an explicit version key
+        if node.name == "state_dict":
+            consts = {n.value for n in ast.walk(node)
+                      if isinstance(n, ast.Constant)
+                      and isinstance(n.value, str)}
+            if not any(c in ("version", "version_tag") for c in consts):
+                self._err(node, "RP006",
+                          "state_dict() emits no 'version'/'version_tag' "
+                          "key; unversioned snapshots cannot be migrated "
+                          "on load")
+
+    # -- expression rules -------------------------------------------------
+    def visit_BinOp(self, node: ast.BinOp):
+        if isinstance(node.op, ast.Mod) and self._func_stack:
+            for side in (node.left, node.right):
+                self._func_stack[-1]["mod_names"].update(_names_in(side))
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call):
+        func = node.func
+        # RP001 — unseeded / global-state numpy RNG in hot paths
+        if self.hot:
+            attr = _is_np_random_attr(func)
+            if attr in _NP_GLOBAL_RNG:
+                self._err(node, "RP001",
+                          f"np.random.{attr}() uses the global RNG; draw "
+                          "from a seeded np.random.default_rng(seed) "
+                          "Generator instead")
+            elif attr == "default_rng" and not node.args and \
+                    not node.keywords:
+                self._err(node, "RP001",
+                          "np.random.default_rng() without a seed is "
+                          "entropy-seeded; pass an explicit seed")
+            # RP002 — wall clock in hot paths
+            if isinstance(func, ast.Attribute) and \
+                    func.attr in ("time", "time_ns") and \
+                    isinstance(func.value, ast.Name) and \
+                    func.value.id == "time":
+                self._err(node, "RP002",
+                          f"time.{func.attr}() in a hot path; simulated "
+                          "runs must not read the wall clock (use the "
+                          "sim clock, or perf_counter for pure timing)")
+        # RP003 — builtin hash() anywhere
+        if isinstance(func, ast.Name) and func.id == "hash":
+            self._err(node, "RP003",
+                      "builtin hash() is salted per process "
+                      "(PYTHONHASHSEED); use zlib.crc32 or a seeded "
+                      "Generator for stable seeds/keys")
+        # RP005 bookkeeping — BlockSpec block-shape tile names
+        if isinstance(func, ast.Attribute) and func.attr == "BlockSpec" \
+                or isinstance(func, ast.Name) and func.id == "BlockSpec":
+            if node.args and self._func_stack:
+                names = {n for n in _names_in(node.args[0])
+                         if n.lower().startswith(_BLOCK_NAME_PREFIXES)}
+                if names:
+                    self._func_stack[-1]["blockspecs"].append((node, names))
+        self.generic_visit(node)
+
+    # -- statement rules --------------------------------------------------
+    def visit_Assert(self, node: ast.Assert):
+        if self.core:
+            self._err(node, "RP004",
+                      "bare assert in core/ guards runtime state but "
+                      "vanishes under python -O; raise a typed error "
+                      "(ValueError/RuntimeError) with the state in the "
+                      "message")
+        self.generic_visit(node)
+
+
+def lint_file(path: Path) -> list[LintError]:
+    try:
+        src = path.read_text()
+        tree = ast.parse(src, filename=str(path))
+    except SyntaxError as e:
+        return [LintError(str(path), e.lineno or 0, "RP000", "syntax",
+                          f"could not parse: {e.msg}")]
+    p = _Pass(path, str(path), src.splitlines())
+    p.visit(tree)
+    return sorted(p.errors, key=lambda e: (e.path, e.line, e.rule))
+
+
+def lint_paths(paths) -> list[LintError]:
+    errors: list[LintError] = []
+    for p in paths:
+        p = Path(p)
+        files = sorted(p.rglob("*.py")) if p.is_dir() else [p]
+        for f in files:
+            errors.extend(lint_file(f))
+    return errors
+
+
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if not argv or any(a in ("-h", "--help") for a in argv):
+        print(__doc__)
+        print("usage: python -m repro.analysis.lint <path> [path ...]")
+        return 0 if argv else 2
+    errors = lint_paths(argv)
+    for e in errors:
+        print(e)
+    n_files = sum(1 for p in argv for _ in
+                  (Path(p).rglob("*.py") if Path(p).is_dir() else (p,)))
+    status = f"{len(errors)} finding(s) in {n_files} file(s)" \
+        if errors else f"clean ({n_files} file(s))"
+    print(f"repro-lint: {status}", file=sys.stderr)
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.analysis import sanitize as _san
 from repro.fleet.traces import install_fleet, resolve_fleet
 
 from .simulation import Metrics, Sim, SimCluster, SimModel
@@ -123,11 +124,23 @@ def _simulate_async_full(model: SimModel, cluster: SimCluster, *, duration,
     def on_leave(k):
         running[k] = False
         epoch[k] += 1
+        if _san.TRACING:
+            _san.emit("sim.device_left", sim=sim, device=int(k),
+                      epoch=int(epoch[k]))
+
+    def on_rejoin(k):
+        if _san.TRACING:
+            _san.emit("sim.device_join", sim=sim, device=int(k),
+                      epoch=int(epoch[k]))
+        dev_round(k)
 
     def dev_round(k):
         if not active[k] or running[k]:
             return
         running[k] = True
+        if _san.TRACING:
+            _san.emit("sim.chain_start", sim=sim, device=int(k),
+                      epoch=int(epoch[k]))
         dev_train(k, H, epoch[k])
 
     def dev_train(k, h_left, e):
@@ -184,11 +197,13 @@ def _simulate_async_full(model: SimModel, cluster: SimCluster, *, duration,
     def model_back(k, e):
         if epoch[k] != e:
             return      # pre-departure round: the live chain owns the device
+        if _san.TRACING:
+            _san.emit("sim.chain_end", sim=sim, device=int(k), epoch=int(e))
         running[k] = False
         dev_round(k)
 
     install_fleet(sim, trace, active, bw, on_leave=on_leave,
-                  on_rejoin=dev_round)
+                  on_rejoin=on_rejoin)
     for k in range(K):
         dev_round(k)
     sim.run(duration)
@@ -246,11 +261,26 @@ def _simulate_split(model: SimModel, cluster: SimCluster, *, duration, H,
     def on_leave(k):
         running[k] = False
         epoch[k] += 1
+        if _san.TRACING:
+            _san.emit("sim.device_left", sim=sim, device=int(k),
+                      epoch=int(epoch[k]))
+
+    def on_rejoin(k):
+        if _san.TRACING:
+            _san.emit("sim.device_join", sim=sim, device=int(k),
+                      epoch=int(epoch[k]))
+        dev_round(k)
 
     def dev_round(k):
         if not active[k] or running[k]:
             return
         running[k] = True
+        # chain events only under async restarts: the sync barrier resets
+        # ``running`` wholesale, which is a different (round, not chain)
+        # discipline the single-live-chain invariant does not describe
+        if not sync_agg and _san.TRACING:
+            _san.emit("sim.chain_start", sim=sim, device=int(k),
+                      epoch=int(epoch[k]))
         dev_fwd(k, H, epoch[k])
 
     def dev_fwd(k, h_left, e):
@@ -351,6 +381,8 @@ def _simulate_split(model: SimModel, cluster: SimCluster, *, duration, H,
     def model_back(k, e):
         if epoch[k] != e:
             return      # pre-departure round: the live chain owns the device
+        if _san.TRACING:
+            _san.emit("sim.chain_end", sim=sim, device=int(k), epoch=int(e))
         running[k] = False
         dev_round(k)
 
@@ -385,7 +417,7 @@ def _simulate_split(model: SimModel, cluster: SimCluster, *, duration, H,
 
     install_fleet(sim, trace, active, bw,
                   on_leave=None if sync_agg else on_leave,
-                  on_rejoin=None if sync_agg else dev_round)
+                  on_rejoin=None if sync_agg else on_rejoin)
     if sync_agg:
         start_round()
     else:

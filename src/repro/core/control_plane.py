@@ -75,6 +75,7 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from repro.analysis import sanitize as _san
 from repro.memory.policy import make_eviction_policy
 
 from .aggregator import staleness_weight
@@ -192,7 +193,10 @@ class ControlPlane:
                 f"n_groups={n_groups} (ω is the Eq. 3 activation cap)")
         if pool_cap < 0:
             raise ValueError(f"pool_cap must be >= 0, got {pool_cap}")
-        assert unit in ("group", "device"), unit
+        if unit not in ("group", "device"):
+            raise ValueError(
+                f"unknown flow unit {unit!r}; expected 'group' (pod path) "
+                "or 'device' (event simulator)")
         self.G = n_groups
         self.omega = omega
         self.H = H
@@ -292,12 +296,17 @@ class ControlPlane:
             # -- then the device emission lands --
             write_slot[h] = self._plan_write(produce[h], send_mask[h])
 
-        return RoundPlan(read_slot=read_slot, write_slot=write_slot,
+        plan = RoundPlan(read_slot=read_slot, write_slot=write_slot,
                          send_mask=send_mask,
                          agg_weight=self.agg_weights(active),
                          bcast_mask=active.astype(np.float32),
                          retire=retire, restore=restore,
                          fill=fill, spill=tuple(self._round_spills))
+        if _san.TRACING:
+            _san.emit("cp.plan", cp=self, plan=plan,
+                      version=int(self.version),
+                      live_slots=self.live_slots, pool_live=self.pool_live)
+        return plan
 
     def retain_group(self, g: int, params):
         """Hold a dropped group's dev/aux params at its last-synced version
@@ -472,6 +481,9 @@ class ControlPlane:
         if not accepted:
             # every update rejected: no aggregation event happened on-mesh
             # (all-zero weights keep current params), nobody resyncs
+            if _san.TRACING:
+                _san.emit("cp.finish", cp=self, version_before=int(t),
+                          version_after=int(t), n_accepted=0)
             return
         self.version = t + 1
         for g in np.flatnonzero(active):
@@ -479,24 +491,35 @@ class ControlPlane:
             # back, so even a rejected (too-stale) group restarts fresh —
             # its delta was dropped (weight 0), not its membership
             self.versions[g] = self.version
+        if _san.TRACING:
+            _san.emit("cp.finish", cp=self, version_before=int(t),
+                      version_after=int(self.version),
+                      n_accepted=len(accepted))
 
     # -- event-simulator staleness hooks (per-arrival, version always
     #    advances: the simulator counts every aggregation event) --
     def aggregate_arrival(self, k: int, t_k: int) -> float:
         """One device model arrived (sim path): returns its α (0 =
         rejected as too stale, Alg. 4 line 13)."""
-        w = staleness_weight(self.version - int(t_k), self.max_delay,
+        t = self.version
+        w = staleness_weight(t - int(t_k), self.max_delay,
                              self.alpha_power)
         if w > 0.0:
             self.n_accepted += 1
         else:
             self.n_rejected += 1
-        self.version += 1
+        self.version = t + 1
+        if _san.TRACING:
+            _san.emit("cp.arrival", cp=self, device=int(k), t_k=int(t_k),
+                      weight=float(w), version_before=int(t))
         return w
 
     def device_synced(self, k: int):
         """Device k received the global model back (Alg. 4 line 20)."""
         self.versions[k] = self.version
+        if _san.TRACING:
+            _san.emit("cp.synced", cp=self, device=int(k),
+                      version=int(self.version))
 
     # ------------------------------------------------------------------
     # introspection / invariants

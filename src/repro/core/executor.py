@@ -48,6 +48,8 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from repro.analysis import sanitize as _san
+
 
 # ---------------------------------------------------------------------------
 # Measured straggler profiles
@@ -317,6 +319,9 @@ class RoundExecutor:
             state, metrics = self.step(state, batch)
             self.cplane.finish_round(active=active)
             self._check_cap(r)
+            if _san.TRACING:
+                _san.emit("exec.round", cp=self.cplane, store=self.store,
+                          round=int(r), in_flight=len(self._pending))
             self._pending.append((st, metrics))
             self.peak_in_flight = max(self.peak_in_flight,
                                       len(self._pending))

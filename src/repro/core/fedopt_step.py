@@ -126,8 +126,11 @@ class FedStepConfig:
     @property
     def micro_batch(self) -> int:
         """Sequences per group per local iteration (Alg. 1 line 4)."""
-        assert self.per_group_batch % self.H == 0, \
-            (self.per_group_batch, self.H)
+        if self.per_group_batch % self.H != 0:
+            raise ValueError(
+                f"per_group_batch={self.per_group_batch} is not divisible "
+                f"by H={self.H}; Alg. 1 consumes per_group_batch/H "
+                "sequences per local iteration")
         return self.per_group_batch // self.H
 
     @property

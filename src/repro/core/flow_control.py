@@ -32,6 +32,8 @@ from __future__ import annotations
 from collections import deque
 from dataclasses import dataclass, field
 
+from repro.analysis import sanitize as _san
+
 
 @dataclass
 class FlowController:
@@ -47,6 +49,12 @@ class FlowController:
     grants: deque = field(default_factory=lambda: deque(maxlen=256))
     _rr: list = field(default_factory=list)     # round-robin order
 
+    # test-only mutation hook (no annotation -> NOT a dataclass field):
+    # True re-introduces PR 1's leak — on_device_left stops reclaiming the
+    # departed device's token/in-flight budget, so the sanitizer's
+    # flow-token-conservation invariant must fire.  Never set outside tests.
+    _test_skip_reclaim = False
+
     @property
     def cap(self) -> int:
         """Total tiered admission budget: mesh ring + host spill pool."""
@@ -61,6 +69,8 @@ class FlowController:
         self.sender_active[k] = False
         self._rr.append(k)
         self._maybe_grant()
+        if _san.TRACING:
+            _san.emit("flow.register", flow=self, device=k)
 
     def unregister(self, k: int):
         self.on_device_left(k)
@@ -71,9 +81,15 @@ class FlowController:
 
     def mark_sent(self, k: int):
         """Device consumed its token -> becomes an in-flight send."""
-        assert self.sender_active.get(k, False), f"device {k} sent without token"
+        if not self.sender_active.get(k, False):
+            raise RuntimeError(
+                f"device {k} sent without a token (buffered={self.buffered}, "
+                f"inflight={self.inflight}, tokens={self.active_tokens}, "
+                f"cap={self.cap})")
         self.sender_active[k] = False
         self.inflight_by[k] = self.inflight_by.get(k, 0) + 1
+        if _san.TRACING:
+            _san.emit("flow.sent", flow=self, device=k)
 
     def inflight_of(self, k: int) -> int:
         return self.inflight_by.get(k, 0)
@@ -85,33 +101,41 @@ class FlowController:
         reclaimed) and the packet landed anyway; the caller must drop it,
         otherwise the ω cap would be violated retroactively."""
         n = self.inflight_by.get(k, 0)
-        if n == 0:
-            return False
-        if n == 1:
-            self.inflight_by.pop(k)
-        else:
-            self.inflight_by[k] = n - 1
-        self.buffered += 1
-        if self.buffered > self.omega:
-            self.n_spilled += 1        # admitted into the spill tier
-        self._maybe_grant()
-        return True
+        accepted = n > 0
+        if accepted:
+            if n == 1:
+                self.inflight_by.pop(k)
+            else:
+                self.inflight_by[k] = n - 1
+            self.buffered += 1
+            if self.buffered > self.omega:
+                self.n_spilled += 1    # admitted into the spill tier
+            self._maybe_grant()
+        if _san.TRACING:
+            _san.emit("flow.enqueue", flow=self, device=k, accepted=accepted,
+                      registered=k in self.sender_active)
+        return accepted
 
     def on_dequeue(self, k: int):
         if self.buffered > self.omega:
             self.n_filled += 1         # a spilled unit moves up a tier
         self.buffered = max(0, self.buffered - 1)
         self._maybe_grant()
+        if _san.TRACING:
+            _san.emit("flow.dequeue", flow=self, device=k)
 
     def on_device_left(self, k: int):
         """A device dropped with a token or an in-flight send: reclaim both,
         so ``promised`` never stays inflated under churn (otherwise grants
         starve as departed devices permanently eat into ω)."""
-        self.sender_active.pop(k, None)
-        self.inflight_by.pop(k, None)
-        if k in self._rr:
-            self._rr.remove(k)
+        if not self._test_skip_reclaim:
+            self.sender_active.pop(k, None)
+            self.inflight_by.pop(k, None)
+            if k in self._rr:
+                self._rr.remove(k)
         self._maybe_grant()
+        if _san.TRACING:
+            _san.emit("flow.device_left", flow=self, device=k)
 
     # -- invariant-preserving grant --
     @property
@@ -139,6 +163,8 @@ class FlowController:
                 self.sender_active[k] = True
                 self.grants.append(k)
                 scanned = 0  # re-scan: more room may remain
+                if _san.TRACING:
+                    _san.emit("flow.grant", flow=self, device=k)
 
     @property
     def within_cap(self) -> bool:

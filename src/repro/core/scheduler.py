@@ -13,6 +13,8 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import Any
 
+from repro.analysis import sanitize as _san
+
 
 @dataclass
 class Message:
@@ -27,7 +29,10 @@ class TaskScheduler:
     """Counter-based scheduler (default) or FIFO (ablation)."""
 
     def __init__(self, n_devices: int, policy: str = "counter"):
-        assert policy in ("counter", "fifo")
+        if policy not in ("counter", "fifo"):
+            raise ValueError(
+                f"unknown scheduler policy {policy!r}; expected 'counter' "
+                "or 'fifo'")
         self.policy = policy
         self.q_model: deque[Message] = deque()
         self.q_act: dict[int, deque[Message]] = {k: deque() for k in range(n_devices)}
@@ -43,6 +48,8 @@ class TaskScheduler:
             self.counters[k] = 0
         self.q_act.setdefault(k, deque())
         self.counters.setdefault(k, 0)
+        if _san.TRACING:
+            _san.emit("sched.add", sched=self, device=k)
 
     def remove_device(self, k: int):
         """Departure (§3.4.2): buffered activations are kept — they are
@@ -51,12 +58,15 @@ class TaskScheduler:
         (zeroing it would hand the departed backlog top priority under the
         argmin policy).  Counter and queue are purged once drained; a
         rejoin (``add_device``) always restarts with fresh history."""
-        if self.q_act.get(k):
-            self._removed.add(k)
-        else:
+        drained = not self.q_act.get(k)
+        if drained:
             self.q_act.pop(k, None)
             self.counters.pop(k, None)
             self._removed.discard(k)
+        else:
+            self._removed.add(k)
+        if _san.TRACING:
+            _san.emit("sched.remove", sched=self, device=k, drained=drained)
 
     # -- Alg. 2 --
     def put(self, m: Message):
@@ -84,6 +94,8 @@ class TaskScheduler:
             self.q_act.pop(k, None)
             self.counters.pop(k, None)
             self._removed.discard(k)
+            if _san.TRACING:
+                _san.emit("sched.purge", sched=self, device=k)
 
     # -- Alg. 3 --
     def get(self) -> Message | None:

@@ -19,6 +19,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from repro.analysis import sanitize as _san
 from repro.fleet.devices import heterogeneous_cluster  # noqa: F401 re-export
 from repro.fleet.selection import (SelectionContext, balance_summary,
                                    make_selection_policy)
@@ -27,6 +28,13 @@ from repro.fleet.traces import FleetTrace, install_fleet, resolve_fleet
 from .control_plane import ControlPlane
 from .executor import StragglerProfiles
 from .scheduler import Message
+
+# test-only mutation hook: True re-introduces PR 5's churn-flap bug — the
+# per-device epoch check in ``model_return`` is skipped, so a pre-departure
+# round's return restarts the device on top of its rejoined chain and the
+# sanitizer's single-live-chain invariant must fire.  Never set outside
+# tests.
+_TEST_SKIP_EPOCH_CHECK = False
 
 
 # ---------------------------------------------------------------------------
@@ -276,6 +284,9 @@ def simulate_fedoptima(model: SimModel, cluster: SimCluster, *,
         if not active[k] or not selected[k] or running[k]:
             return
         running[k] = True
+        if _san.TRACING:
+            _san.emit("sim.chain_start", sim=sim, device=int(k),
+                      epoch=int(epoch[k]))
         device_iter(k, h_left, epoch[k])
 
     def device_iter(k, h_left, e):
@@ -320,7 +331,11 @@ def simulate_fedoptima(model: SimModel, cluster: SimCluster, *,
                           enqueued_at=sim.t))
         m.max_buffered = max(m.max_buffered, sched.total_buffered)
         cp.note_buffered(sched.total_buffered)
-        assert flow.within_cap, "flow-control cap violated in simulation"
+        if not flow.within_cap:
+            raise RuntimeError(
+                f"flow-control cap violated in simulation at t={sim.t}: "
+                f"device {k} admitted with buffered={flow.buffered}, "
+                f"promised={flow.promised} of cap={flow.cap}")
         kick_server()
 
     def model_arrive(k, e):
@@ -360,11 +375,13 @@ def simulate_fedoptima(model: SimModel, cluster: SimCluster, *,
 
     def model_return(k, e):
         cp.device_synced(k)
-        if epoch[k] != e:
+        if epoch[k] != e and not _TEST_SKIP_EPOCH_CHECK:
             # a pre-departure round's model came back after the device
             # left (and possibly rejoined with a live chain): syncing is
             # fine, but this return must not restart the device
             return
+        if _san.TRACING:
+            _san.emit("sim.chain_end", sim=sim, device=int(k), epoch=int(e))
         running[k] = False
         device_start_round(k, H)
 
@@ -382,6 +399,9 @@ def simulate_fedoptima(model: SimModel, cluster: SimCluster, *,
     def on_leave(k):
         running[k] = False
         epoch[k] += 1                 # kill the chain's pending callbacks
+        if _san.TRACING:
+            _san.emit("sim.device_left", sim=sim, device=int(k),
+                      epoch=int(epoch[k]))
         flow.on_device_left(k)
         # purge the consumption counter (§3.4.2: a rejoin starts with
         # fresh history); buffered activations still train
@@ -394,6 +414,9 @@ def simulate_fedoptima(model: SimModel, cluster: SimCluster, *,
         if reg is not None:
             reg.rejoin(k, t=sim.t)
             reg.set_bandwidth(k, float(bw[k]))
+        if _san.TRACING:
+            _san.emit("sim.device_join", sim=sim, device=int(k),
+                      epoch=int(epoch[k]))
         device_start_round(k, H)
 
     def reselect():

@@ -148,6 +148,10 @@ def flash_attention_fwd_bhsd(q, k, v, *, causal=True, window=None,
     kp = _pad_to(k, 2, block_k)
     vp = _pad_to(v, 2, block_k)
     Sp, Skvp = qp.shape[2], kp.shape[2]
+    if Sp % block_q or Skvp % block_k:
+        raise ValueError(
+            f"padded seq lengths ({Sp}, {Skvp}) not divisible by blocks "
+            f"({block_q}, {block_k}); the grid would drop the tail")
     grid = (B, H, Sp // block_q, Skvp // block_k)
 
     kernel = functools.partial(
@@ -330,6 +334,10 @@ def flash_attention_bwd_bhsd(q, k, v, o, lse, do, *, causal=True, window=None,
     lsep = _pad_to(lse, 2, block_q)
     deltap = _pad_to(delta, 2, block_q)
     Sp, Skvp = qp.shape[2], kp.shape[2]
+    if Sp % block_q or Skvp % block_k:
+        raise ValueError(
+            f"padded seq lengths ({Sp}, {Skvp}) not divisible by blocks "
+            f"({block_q}, {block_k}); the grid would drop the tail")
     nq, nk = Sp // block_q, Skvp // block_k
     del op  # o only feeds Δ
 

@@ -504,6 +504,13 @@ def main() -> None:
                         "runs the most-stale half each tick).  Fed the "
                         "Alg. 3 consumption counters + staleness "
                         "accounting; default: every available device")
+    p.add_argument("--sanitize", action=argparse.BooleanOptionalAction,
+                   default=False,
+                   help="run under the protocol sanitizer "
+                        "(repro.analysis.sanitize): control-plane events "
+                        "are checked online against the invariant "
+                        "catalogue and any violation aborts the run with "
+                        "the offending event window")
     p.add_argument("--ckpt-dir", default=None)
     p.add_argument("--ckpt-every", type=int, default=5)
     p.add_argument("--log-every", type=int, default=1)
@@ -511,10 +518,16 @@ def main() -> None:
     p.add_argument("--duration", type=float, default=300.0)
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args()
-    if args.mode == "pod":
-        run_pod(args)
+    run = run_pod if args.mode == "pod" else run_sim
+    if args.sanitize:
+        from repro.analysis.sanitize import sanitized
+        with sanitized() as san:
+            run(args)
+        rep = san.report()
+        print(f"sanitizer: {rep['events']} events checked, "
+              f"{rep['n_violations']} violations")
     else:
-        run_sim(args)
+        run(args)
 
 
 if __name__ == "__main__":

@@ -20,6 +20,8 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.analysis import sanitize as _san
+
 
 def _quant_leaf(x: np.ndarray) -> dict:
     """Per-tensor int8 spill encoding (fedopt_step's aggregation quant)."""
@@ -122,12 +124,18 @@ class ActivationStore:
         self.pool_bytes += _nbytes(stored)
         self.peak_pool_bytes = max(self.peak_pool_bytes, self.pool_bytes)
         self.peak_entries = max(self.peak_entries, len(self._pool))
+        if _san.TRACING:
+            _san.emit("store.spill", store=self, key=key,
+                      entries=len(self._pool))
 
     def fill(self, key: int) -> dict:
         """Pop one entry, dequantized, ready to scatter back on-mesh."""
         e = self._pool.pop(int(key))
         self.n_fills += 1
         self.pool_bytes -= _nbytes(e["payload"])
+        if _san.TRACING:
+            _san.emit("store.fill", store=self, key=int(key),
+                      entries=len(self._pool))
         return _decode(e["payload"], e["dtypes"])
 
     # ------------------------------------------------------------------

@@ -1,0 +1,242 @@
+"""Protocol sanitizer: a clean protocol is silent, the two historical
+bug classes (reintroduced behind test-only hooks) are caught online with
+the right invariant name, and the checks themselves fire on hand-built
+violations."""
+import numpy as np
+import pytest
+
+from _propcheck import given, settings, strategies as st
+from repro.analysis.sanitize import (INVARIANTS, InvariantViolation,
+                                     ProtocolSanitizer, sanitized, suspended)
+from repro.core import simulation
+from repro.core.baselines import REGISTRY
+from repro.core.flow_control import FlowController
+from repro.core.scheduler import TaskScheduler
+from repro.core.simulation import (SimModel, heterogeneous_cluster,
+                                   simulate_fedoptima)
+from repro.fleet import diurnal_trace, flaky_trace, sample_cluster
+
+MODEL = SimModel(dev_fwd_flops=1e9, dev_bwd_flops=2e9, full_fwd_flops=5e9,
+                 srv_flops_per_batch=8e9, act_bytes=1e6, dev_model_bytes=4e6,
+                 full_model_bytes=2e7, batch_size=32)
+
+
+def _churn_trace(K, dur, seed=7, cluster=None):
+    bw = cluster.dev_bw if cluster is not None else 12.5e6
+    return diurnal_trace(K, horizon=dur, interval=dur / 24.0, day=dur / 2.0,
+                         on_frac=0.6, bw=bw, bw_jitter=0.3, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# a correct protocol is silent
+# ---------------------------------------------------------------------------
+
+def test_clean_churn_run_zero_violations():
+    cluster = heterogeneous_cluster(16)
+    trace = _churn_trace(16, 600.0, cluster=cluster)
+    with sanitized() as san:
+        m = simulate_fedoptima(MODEL, cluster, duration=600.0, omega=8,
+                               fleet=trace, seed=5)
+    assert san.n_violations == 0
+    assert san.n_events > 1000          # the run was actually instrumented
+    assert san.counts.get("sim.device_left", 0) > 0   # churn really happened
+    assert m.throughput > 0
+
+
+def test_acceptance_scenario_k32_diurnal():
+    """ISSUE 6 acceptance: the bench_fleet K=32 diurnal-trace scenario
+    completes under the sanitizer with zero violations."""
+    cluster = sample_cluster(32, "low:2,mid:3,high:2,premium:1", seed=11)
+    trace = _churn_trace(32, 120.0, cluster=cluster)
+    with sanitized() as san:
+        m = simulate_fedoptima(MODEL, cluster, duration=120.0, omega=8,
+                               fleet=trace, seed=11)
+    assert san.n_violations == 0
+    assert san.counts.get("cp.arrival", 0) > 0
+    assert m.srv_batches > 0
+
+
+def test_baselines_clean_under_churn():
+    cluster = heterogeneous_cluster(8)
+    trace = flaky_trace(8, 300.0, interval=15.0, p_drop=0.2,
+                        bw_lo=8e6, bw_hi=16e6, seed=3)
+    with sanitized() as san:
+        for name, fn in REGISTRY.items():
+            fn(MODEL, cluster, duration=300.0, fleet=trace)
+    assert san.n_violations == 0
+    assert san.n_events > 0
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from(["diurnal", "flaky"]),
+       st.sampled_from([4, 8, 16]))
+def test_property_seeded_churn_is_clean(seed, kind, omega):
+    """Property: no (seed, trace kind, omega) combination produces a
+    violation — the invariants hold on every code path churn can reach."""
+    cluster = heterogeneous_cluster(12)
+    if kind == "diurnal":
+        trace = _churn_trace(12, 300.0, seed=seed, cluster=cluster)
+    else:
+        trace = flaky_trace(12, 300.0, interval=12.0, p_drop=0.15,
+                            bw_lo=8e6, bw_hi=16e6, seed=seed)
+    with sanitized() as san:
+        simulate_fedoptima(MODEL, cluster, duration=300.0, omega=omega,
+                           fleet=trace, seed=seed)
+    assert san.n_violations == 0
+
+
+# ---------------------------------------------------------------------------
+# mutation tests: the two historical bugs, reintroduced behind hooks
+# ---------------------------------------------------------------------------
+
+def test_mutation_skipped_token_reclaim_is_caught():
+    """PR 1's bug: ``on_device_left`` forgets to reclaim the departed
+    device's token/in-flight budget.  The sanitizer must name
+    flow-token-conservation at the first leaking departure."""
+    cluster = heterogeneous_cluster(16)
+    trace = _churn_trace(16, 600.0, cluster=cluster)
+    FlowController._test_skip_reclaim = True
+    try:
+        with pytest.raises(InvariantViolation) as ei:
+            with sanitized():
+                simulate_fedoptima(MODEL, cluster, duration=600.0, omega=8,
+                                   fleet=trace, seed=5)
+    finally:
+        FlowController._test_skip_reclaim = False
+    assert ei.value.invariant == "flow-token-conservation"
+    assert "not reclaimed" in str(ei.value)
+    assert ei.value.window                     # diagnosis window attached
+
+
+def test_mutation_skipped_epoch_check_is_caught(monkeypatch):
+    """PR 5's bug: a model return from before a departure re-arms the
+    device's chain, forking two concurrent chains after the rejoin.  The
+    sanitizer must name single-live-chain."""
+    monkeypatch.setattr(simulation, "_TEST_SKIP_EPOCH_CHECK", True)
+    cluster = heterogeneous_cluster(16)
+    trace = _churn_trace(16, 600.0, cluster=cluster)
+    with pytest.raises(InvariantViolation) as ei:
+        with sanitized():
+            simulate_fedoptima(MODEL, cluster, duration=600.0, omega=8,
+                               fleet=trace, seed=5)
+    assert ei.value.invariant == "single-live-chain"
+
+
+def test_posthoc_mode_collects_instead_of_raising():
+    """raise_on_violation=False surveys ALL violations of a mutated build
+    instead of stopping at the first."""
+    cluster = heterogeneous_cluster(16)
+    trace = _churn_trace(16, 600.0, cluster=cluster)
+    FlowController._test_skip_reclaim = True
+    try:
+        san = ProtocolSanitizer(raise_on_violation=False)
+        with sanitized(san):
+            simulate_fedoptima(MODEL, cluster, duration=600.0, omega=8,
+                               fleet=trace, seed=5)
+    finally:
+        FlowController._test_skip_reclaim = False
+    assert san.n_violations >= 1
+    assert all(v.invariant == "flow-token-conservation"
+               for v in san.violations)
+    rep = san.report()
+    assert rep["n_violations"] == san.n_violations
+    assert rep["violations"][0]["invariant"] == "flow-token-conservation"
+
+
+# ---------------------------------------------------------------------------
+# per-invariant unit triggers (hand-built violating event streams)
+# ---------------------------------------------------------------------------
+
+def test_unit_unregistered_arrival():
+    flow = FlowController(omega=2)
+    for k in range(4):
+        flow.register(k)
+    with sanitized() as san, pytest.raises(InvariantViolation) as ei:
+        # forge an accepted arrival from a device the flow never met
+        san.record("flow.enqueue", {"flow": flow, "device": 99,
+                                    "accepted": True, "registered": False})
+    assert ei.value.invariant == "no-unregistered-arrival"
+
+
+def test_unit_counter_purge_on_rejoin():
+    sched = TaskScheduler(n_devices=4)
+    with sanitized() as san, pytest.raises(InvariantViolation) as ei:
+        sched.q_act[1].append("act")      # backlog pending -> not drained
+        sched.remove_device(1)
+        sched.counters[1] = 3             # forge surviving stale history
+        # real add_device zeroes the counter; forge the rejoin event
+        san.record("sched.add", {"sched": sched, "device": 1})
+    assert ei.value.invariant == "counter-purge"
+
+
+def test_unit_staleness_monotonicity():
+    from repro.core.control_plane import ControlPlane
+    cp = ControlPlane.for_sim(4, 2)
+    with sanitized() as san, pytest.raises(InvariantViolation) as ei:
+        san.record("cp.finish", {"cp": cp})
+        cp.version += 5
+        san.record("cp.finish", {"cp": cp})
+        cp.version -= 3                   # forge a version rollback
+        san.record("cp.finish", {"cp": cp})
+    assert ei.value.invariant == "staleness-monotonicity"
+
+
+def test_unit_single_chain_double_start():
+    sim_obj = object()
+    with sanitized() as san, pytest.raises(InvariantViolation) as ei:
+        san.record("sim.chain_start", {"sim": sim_obj, "device": 0,
+                                       "epoch": 0})
+        san.record("sim.chain_start", {"sim": sim_obj, "device": 0,
+                                       "epoch": 0})
+    assert ei.value.invariant == "single-live-chain"
+    assert "second concurrent chain" in str(ei.value)
+
+
+def test_unit_violation_window_is_bounded():
+    sim_obj = object()
+    san = ProtocolSanitizer(window=8, raise_on_violation=False)
+    with sanitized(san):
+        for i in range(50):
+            san.record("sim.chain_end", {"sim": sim_obj, "device": i % 4,
+                                         "epoch": 0})
+        san.record("sim.chain_start", {"sim": sim_obj, "device": 0,
+                                       "epoch": 3})   # stale epoch
+    assert san.n_violations == 1
+    assert len(san.violations[0].window) <= 8
+
+
+# ---------------------------------------------------------------------------
+# plumbing
+# ---------------------------------------------------------------------------
+
+def test_suspended_detaches_globally():
+    from repro.analysis import sanitize as _san
+    with sanitized() as san:
+        assert _san.TRACING
+        with suspended():
+            assert not _san.TRACING
+            _san.emit("flow.register", flow=None, device=0)  # goes nowhere
+        assert _san.TRACING
+    assert san.counts.get("flow.register", 0) == 0
+
+
+def test_catalogue_names_are_unique_and_indexed():
+    names = [inv.name for inv in INVARIANTS]
+    assert len(names) == len(set(names))
+    for inv in INVARIANTS:
+        assert inv.events, inv.name
+        assert inv.statement and inv.module and inv.caught
+
+
+def test_sanitizer_does_not_perturb_the_run():
+    """Read-only contract: same seed, same metrics with and without."""
+    cluster = heterogeneous_cluster(8)
+    trace = _churn_trace(8, 300.0, cluster=cluster)
+    kw = dict(duration=300.0, omega=4, fleet=trace, seed=9)
+    with suspended():
+        plain = simulate_fedoptima(MODEL, cluster, **kw)
+        with sanitized():
+            checked = simulate_fedoptima(MODEL, cluster, **kw)
+    assert plain.srv_idle_frac == checked.srv_idle_frac
+    assert plain.dev_idle_frac == checked.dev_idle_frac
+    assert plain.throughput == checked.throughput
