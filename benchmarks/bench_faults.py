@@ -1,0 +1,120 @@
+"""Chaos plane: goodput under faults, with and without recovery armor.
+
+A K=32 capability-sampled fleet on the shared diurnal trace (same
+scenario as ``bench_fleet``) runs FedOptima three times against ONE
+seeded dense fault schedule (``repro.faults``):
+
+* **clean** — no faults: the goodput ceiling for this trace.
+* **faulted** — faults injected, recovery DISARMED (``fault_gate=False``):
+  poisoned activation batches flow through and the server spends compute
+  on them (badput); delayed/duplicate arrivals are still absorbed by the
+  protocol itself (staleness weighting / dedup are structural, not
+  optional).
+* **faulted+recovery** — the default :class:`repro.faults.UpdateGate`
+  quarantines poison at arrival (flow token withdrawn, strike counters,
+  re-admission backoff), so every injected fault class is matched by a
+  recovery disposition.
+
+Per leg: server batches consumed, **goodput** (batches minus poisoned
+ones the server consumed), badput fraction, and the injector's full
+accounting report.  Results land in ``BENCH_faults.json``; the headline
+comparison is goodput_clean >= goodput_recovered >> goodput_unarmored's
+*useful* share even when raw srv_batches look similar.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.core.simulation import simulate_fedoptima
+from repro.faults import make_fault_schedule
+from repro.fleet import diurnal_trace, sample_cluster
+
+from .common import (MOBILENET_SPLIT, OMEGA, Row, bench_duration,
+                     fedoptima_control, timed)
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_faults.json")
+
+K = 32
+TIERS = "low:2,mid:3,high:2,premium:1"
+#: ceil(density * K / 4) events per fault class — dense: ~2 per device
+#: across the schedule's classes
+DENSITY = 2.0
+
+#: activation dispositions that mean the server consumed a poisoned batch
+_BADPUT_KEYS = ("admitted_poisoned_act", "gate_missed_act")
+
+
+def _shared_scenario(dur):
+    cluster = sample_cluster(K, TIERS, seed=11)
+    trace = diurnal_trace(K, horizon=dur, interval=dur / 24.0, day=dur / 2.0,
+                          on_frac=0.6, bw=cluster.dev_bw, bw_jitter=0.3,
+                          seed=7)
+    return cluster, trace
+
+
+def _badput(report) -> int:
+    if report is None:
+        return 0
+    disp = report.get("disposition", {})
+    return sum(int(disp.get(k, 0)) for k in _BADPUT_KEYS)
+
+
+def _entry(m):
+    report = m.faults
+    bad = _badput(report)
+    good = max(int(m.srv_batches) - bad, 0)
+    out = {"srv_batches": int(m.srv_batches), "goodput_batches": good,
+           "badput_batches": bad,
+           "badput_frac": bad / max(int(m.srv_batches), 1),
+           "throughput": m.throughput, "srv_idle": m.srv_idle_frac,
+           "dev_idle": m.dev_idle_frac}
+    if report is not None:
+        out["faults"] = report
+    return out
+
+
+def _derived(m):
+    e = _entry(m)
+    matched = "" if m.faults is None else f";matched={m.faults['matched']}"
+    return (f"goodput={e['goodput_batches']};badput={e['badput_batches']}"
+            f";srv_batches={e['srv_batches']};tput={m.throughput:.1f}"
+            f"{matched}")
+
+
+def main() -> list[Row]:
+    dur = bench_duration(3600.0, smoke=120.0)
+    cluster, trace = _shared_scenario(dur)
+    sched = make_fault_schedule(K, dur, seed=5, density=DENSITY)
+    rows = []
+    record = {"K": K, "duration": dur, "tiers": TIERS, "density": DENSITY,
+              "schedule": sched.counts(), "trace": trace.meta, "legs": {}}
+
+    legs = (("clean", {}),
+            ("faulted", {"faults": sched, "fault_gate": False}),
+            ("faulted_recovery", {"faults": sched}))
+    for name, kw in legs:
+        cp = fedoptima_control(cluster)
+        m, us = timed(simulate_fedoptima, MOBILENET_SPLIT, cluster,
+                      duration=dur, omega=OMEGA, fleet=trace, control=cp,
+                      **kw)
+        if not cp.flow.within_cap:
+            raise RuntimeError(f"faults/{name}: flow cap violated — "
+                               "quarantine leaked a token")
+        rows.append(Row(f"faults/{name}", us, _derived(m)))
+        record["legs"][name] = _entry(m)
+
+    rec = record["legs"]["faulted_recovery"].get("faults")
+    if rec is not None and not rec["matched"]:
+        raise RuntimeError("faults/faulted_recovery: injected faults were "
+                           f"not all matched by recovery: {rec}")
+
+    with open(OUT_PATH, "w") as fh:
+        json.dump(record, fh, indent=2, sort_keys=True)
+    rows.append(Row("faults/json", 0.0, f"wrote={os.path.basename(OUT_PATH)}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(r.csv())

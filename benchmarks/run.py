@@ -17,9 +17,9 @@ from __future__ import annotations
 import sys
 
 from . import (bench_ablation_aux, bench_ablation_sched, bench_accuracy,
-               bench_communication, bench_fleet, bench_idle, bench_kernels,
-               bench_memory, bench_partition, bench_resilience,
-               bench_roofline, bench_throughput, common)
+               bench_communication, bench_faults, bench_fleet, bench_idle,
+               bench_kernels, bench_memory, bench_partition,
+               bench_resilience, bench_roofline, bench_throughput, common)
 
 SUITES = {
     "communication": bench_communication,   # Fig. 2
@@ -34,11 +34,12 @@ SUITES = {
     "roofline": bench_roofline,             # §Roofline (deliverable g)
     "kernels": bench_kernels,               # Pallas fwd/bwd vs references
     "fleet": bench_fleet,                   # shared-trace scenario compare
+    "faults": bench_faults,                 # chaos plane: goodput under faults
 }
 
 
 #: Suites whose durations honor common.SMOKE / bench_duration.
-SMOKE_SUITES = ("idle", "throughput", "memory", "fleet")
+SMOKE_SUITES = ("idle", "throughput", "memory", "fleet", "faults")
 
 
 def main() -> None:

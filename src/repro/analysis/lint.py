@@ -7,21 +7,24 @@ start in milliseconds.
 Rules
 -----
 RP001  unseeded-random       no global/unseeded ``np.random.*`` in hot
-                             paths (``core/``, ``fleet/``): every draw
+                             paths (``core/``, ``fleet/``, ``runtime/``,
+                             ``checkpoint/``, ``faults/``): every draw
                              must go through a seeded ``default_rng`` so
                              sim results replay bit-for-bit.  ``data/``
                              and ``launch/`` are exempt (allowlist).
 RP002  wallclock             no ``time.time()``/``time.time_ns()`` in hot
                              paths — simulated time is the only clock
-                             there (``perf_counter`` for intervals is
-                             fine; it never feeds logic).
+                             there (``perf_counter``/``monotonic`` for
+                             intervals is fine; it never feeds logic).
 RP003  hash-seed             builtin ``hash()`` is salted per process
                              (PYTHONHASHSEED) and must never derive seeds
                              or keys; use ``zlib.crc32`` or a Generator.
-RP004  bare-assert           no ``assert`` guarding runtime state in
-                             ``core/`` — asserts vanish under ``-O`` (the
-                             executor's ``_check_cap`` lesson); raise a
-                             typed error with the violating state.
+RP004  bare-assert           no ``assert`` guarding runtime state in the
+                             strict segments (``core/``, ``runtime/``,
+                             ``checkpoint/``, ``faults/``) — asserts
+                             vanish under ``-O`` (the executor's
+                             ``_check_cap`` lesson); raise a typed error
+                             with the violating state.
 RP005  blockspec-div         every Pallas ``BlockSpec`` block-shape name
                              (``block_*``/``chunk*``) must appear in a
                              ``%`` divisibility check in the same
@@ -44,7 +47,10 @@ from pathlib import Path
 __all__ = ["LintError", "RULES", "lint_file", "lint_paths", "main"]
 
 #: path segments in scope for the hot-path rules (RP001/RP002)
-HOT_SEGMENTS = ("core", "fleet")
+HOT_SEGMENTS = ("core", "fleet", "runtime", "checkpoint", "faults")
+#: path segments where bare asserts are banned outright (RP004): state
+#: these modules guard must survive ``python -O``
+STRICT_SEGMENTS = ("core", "runtime", "checkpoint", "faults")
 #: path segments exempt from the hot-path rules even when nested oddly
 EXEMPT_SEGMENTS = ("data", "launch", "configs", "tests")
 
@@ -121,8 +127,8 @@ class _Pass(ast.NodeVisitor):
         self.rel = rel
         self.lines = lines
         self.hot = _in_hot_path(path)
-        self.core = "core" in _segments(path) and \
-            not any(s in _segments(path) for s in EXEMPT_SEGMENTS)
+        self.strict = any(s in _segments(path) for s in STRICT_SEGMENTS) \
+            and not any(s in _segments(path) for s in EXEMPT_SEGMENTS)
         self.errors: list[LintError] = []
         self._func_stack: list[dict] = []
 
@@ -221,12 +227,12 @@ class _Pass(ast.NodeVisitor):
 
     # -- statement rules --------------------------------------------------
     def visit_Assert(self, node: ast.Assert):
-        if self.core:
+        if self.strict:
             self._err(node, "RP004",
-                      "bare assert in core/ guards runtime state but "
-                      "vanishes under python -O; raise a typed error "
-                      "(ValueError/RuntimeError) with the state in the "
-                      "message")
+                      "bare assert in a strict segment guards runtime "
+                      "state but vanishes under python -O; raise a typed "
+                      "error (ValueError/RuntimeError) with the state in "
+                      "the message")
         self.generic_visit(node)
 
 

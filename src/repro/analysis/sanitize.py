@@ -294,7 +294,7 @@ INVARIANTS: tuple[Invariant, ...] = (
         module="core/flow_control.py",
         caught="PR 1: leaked in-flight tokens under churn",
         events=("flow.register", "flow.grant", "flow.sent", "flow.enqueue",
-                "flow.dequeue", "flow.device_left"),
+                "flow.dequeue", "flow.device_left", "flow.quarantine"),
         check=_check_flow_conservation),
     Invariant(
         name="no-unregistered-arrival",

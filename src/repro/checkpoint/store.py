@@ -1,15 +1,28 @@
-"""Fault-tolerant checkpoint store: atomic, versioned pytree snapshots.
+"""Fault-tolerant checkpoint store: atomic, versioned, verified snapshots.
 
 Layout::
 
     <dir>/step_000120/arrays.npz     # flattened leaves
     <dir>/step_000120/extras.npz     # optional side payload (same format)
-    <dir>/step_000120/tree.json      # treedef + leaf dtypes + metadata
+    <dir>/step_000120/tree.json      # treedef + keys + checksums + metadata
     <dir>/step_000120/COMMITTED      # written last — presence = valid
 
-Writes go to a temp dir and are renamed into place, so a crash mid-write
-never corrupts the store (restart-safe).  ``latest_step`` ignores
-uncommitted snapshots.  ``retain`` garbage-collects old snapshots.
+Crash consistency is layered:
+
+* **atomic commit** — writes go to a temp dir and are renamed into place,
+  so a crash mid-write never corrupts the store; ``latest_step`` ignores
+  uncommitted snapshots (a missing COMMITTED marker = the rename never
+  happened).
+* **per-array checksums** — the manifest records a CRC32 per leaf
+  (``checksums`` / ``extra_checksums``), so a snapshot torn AFTER commit
+  (bit rot, truncation, a partial copy) is detected at restore instead of
+  silently half-loading; every restore path raises
+  :class:`CorruptSnapshotError` rather than returning damaged arrays.
+* **verified fallback** — :func:`verify_snapshot` checks one snapshot end
+  to end and :func:`latest_verified_step` walks committed snapshots newest
+  first, returning the newest one that verifies plus the list it skipped
+  (``runtime.fault_tolerance.resume_or_init`` resumes from that and
+  reports the skips).  Pre-checksum snapshots verify by loadability only.
 
 ``extras`` is a second, independently-structured pytree riding the same
 atomic snapshot — used for state whose structure varies run-to-run and so
@@ -23,10 +36,16 @@ import json
 import os
 import shutil
 import tempfile
+import zlib
 from typing import Any
 
 import jax
 import numpy as np
+
+
+class CorruptSnapshotError(RuntimeError):
+    """A committed snapshot failed verification (torn file, checksum
+    mismatch, unreadable manifest, missing/mismatched leaves)."""
 
 
 def _flatten_with_paths(tree) -> dict[str, np.ndarray]:
@@ -35,6 +54,14 @@ def _flatten_with_paths(tree) -> dict[str, np.ndarray]:
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
         flat[key] = np.asarray(leaf)
     return flat
+
+
+def _crc(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes())
+
+
+def _checksums(flat: dict[str, np.ndarray]) -> dict[str, int]:
+    return {k: _crc(v) for k, v in flat.items()}
 
 
 def save(directory: str, step: int, tree: Any, metadata: dict | None = None,
@@ -48,11 +75,14 @@ def save(directory: str, step: int, tree: Any, metadata: dict | None = None,
         np.savez(os.path.join(tmp, "arrays.npz"), **flat)
         treedef = jax.tree_util.tree_structure(tree)
         meta = {"step": step, "treedef": str(treedef),
-                "keys": list(flat.keys()), "metadata": metadata or {}}
+                "keys": list(flat.keys()),
+                "checksums": _checksums(flat),
+                "metadata": metadata or {}}
         if extras is not None and jax.tree_util.tree_leaves(extras):
             eflat = _flatten_with_paths(extras)
             np.savez(os.path.join(tmp, "extras.npz"), **eflat)
             meta["extra_keys"] = list(eflat.keys())
+            meta["extra_checksums"] = _checksums(eflat)
         with open(os.path.join(tmp, "tree.json"), "w") as f:
             json.dump(meta, f)
         with open(os.path.join(tmp, "COMMITTED"), "w") as f:
@@ -89,16 +119,64 @@ def latest_step(directory: str) -> int | None:
     return steps[-1] if steps else None
 
 
-def _restore_npz(npz_path: str, like: Any) -> Any:
-    """Load a flat-keyed npz back into the structure of ``like``."""
-    with np.load(npz_path) as z:
-        flat = {k: z[k] for k in z.files}
+def _load_manifest(directory: str, step: int) -> dict:
+    path = os.path.join(directory, f"step_{step:08d}", "tree.json")
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError) as err:
+        raise CorruptSnapshotError(
+            f"unreadable snapshot manifest {path}: {err}") from err
+
+
+def _load_npz(npz_path: str) -> dict[str, np.ndarray]:
+    try:
+        with np.load(npz_path) as z:
+            return {k: z[k] for k in z.files}
+    except Exception as err:     # zipfile/npy corruption surfaces variedly
+        raise CorruptSnapshotError(
+            f"unreadable snapshot payload {npz_path}: {err}") from err
+
+
+def _verify_flat(flat: dict, keys: list, checksums: dict | None,
+                 npz_path: str) -> None:
+    missing = [k for k in keys if k not in flat]
+    if missing:
+        raise CorruptSnapshotError(
+            f"{npz_path} is missing {len(missing)} manifest leaves "
+            f"(first: {missing[0]!r})")
+    if checksums:
+        for k in keys:
+            want = checksums.get(k)
+            if want is not None and _crc(flat[k]) != want:
+                raise CorruptSnapshotError(
+                    f"checksum mismatch for leaf {k!r} in {npz_path} — "
+                    "the snapshot was torn after commit; restore from an "
+                    "older verified snapshot instead")
+
+
+def _restore_npz(npz_path: str, like: Any, *, keys: list | None = None,
+                 checksums: dict | None = None) -> Any:
+    """Load a flat-keyed npz back into the structure of ``like``,
+    verifying manifest checksums when available."""
+    flat = _load_npz(npz_path)
     ref = _flatten_with_paths(jax.tree.map(
         lambda x: np.zeros(x.shape, x.dtype) if hasattr(x, "shape") else x, like))
     leaves, treedef = jax.tree_util.tree_flatten(like)
-    keys = list(ref.keys())
-    assert len(keys) == len(leaves)
-    out = [flat[k] for k in keys]
+    ref_keys = list(ref.keys())
+    if len(ref_keys) != len(leaves):
+        raise CorruptSnapshotError(
+            f"restore template flattens to {len(ref_keys)} keyed leaves "
+            f"but {len(leaves)} tree leaves — the template's structure "
+            "cannot address the snapshot")
+    _verify_flat(flat, keys if keys is not None else ref_keys, checksums,
+                 npz_path)
+    try:
+        out = [flat[k] for k in ref_keys]
+    except KeyError as err:
+        raise CorruptSnapshotError(
+            f"{npz_path} has no leaf {err.args[0]!r} — the restore "
+            "template does not match the snapshot's structure") from err
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
@@ -111,9 +189,14 @@ def _committed_path(directory: str, step: int) -> str:
 
 def restore(directory: str, step: int, like: Any) -> Any:
     """Restore into the structure of ``like`` (a pytree of arrays or
-    ShapeDtypeStructs).  Leaf order follows ``like``'s treedef."""
+    ShapeDtypeStructs).  Leaf order follows ``like``'s treedef.  Raises
+    :class:`CorruptSnapshotError` (never half-loads) when the snapshot
+    was torn after commit."""
     path = _committed_path(directory, step)
-    return _restore_npz(os.path.join(path, "arrays.npz"), like)
+    meta = _load_manifest(directory, step)
+    return _restore_npz(os.path.join(path, "arrays.npz"), like,
+                        keys=meta.get("keys"),
+                        checksums=meta.get("checksums"))
 
 
 def restore_extras(directory: str, step: int, like: Any) -> Any:
@@ -125,9 +208,46 @@ def restore_extras(directory: str, step: int, like: Any) -> Any:
     npz = os.path.join(path, "extras.npz")
     if not os.path.exists(npz):
         raise FileNotFoundError(f"snapshot {path} has no extras payload")
-    return _restore_npz(npz, like)
+    meta = _load_manifest(directory, step)
+    return _restore_npz(npz, like, keys=meta.get("extra_keys"),
+                        checksums=meta.get("extra_checksums"))
 
 
 def restore_metadata(directory: str, step: int) -> dict:
-    with open(os.path.join(directory, f"step_{step:08d}", "tree.json")) as f:
-        return json.load(f)["metadata"]
+    return _load_manifest(directory, step)["metadata"]
+
+
+def verify_snapshot(directory: str, step: int) -> tuple[bool, str]:
+    """End-to-end integrity check of one committed snapshot: manifest
+    parses, payloads load, every manifest leaf is present, and every
+    recorded checksum matches.  Snapshots written before checksums were
+    recorded verify by loadability alone.  Returns (ok, reason)."""
+    path = os.path.join(directory, f"step_{step:08d}")
+    if not os.path.exists(os.path.join(path, "COMMITTED")):
+        return False, "no COMMITTED marker"
+    try:
+        meta = _load_manifest(directory, step)
+        flat = _load_npz(os.path.join(path, "arrays.npz"))
+        _verify_flat(flat, meta.get("keys", list(flat)),
+                     meta.get("checksums"), os.path.join(path, "arrays.npz"))
+        if meta.get("extra_keys"):
+            eflat = _load_npz(os.path.join(path, "extras.npz"))
+            _verify_flat(eflat, meta["extra_keys"],
+                         meta.get("extra_checksums"),
+                         os.path.join(path, "extras.npz"))
+    except CorruptSnapshotError as err:
+        return False, str(err)
+    return True, ""
+
+
+def latest_verified_step(directory: str) -> tuple[int | None, list]:
+    """The newest committed snapshot that passes :func:`verify_snapshot`,
+    walking newest-first; snapshots skipped on the way are returned as
+    ``(step, reason)`` pairs so resumers can report what was lost."""
+    skipped: list[tuple[int, str]] = []
+    for step in reversed(committed_steps(directory)):
+        ok, reason = verify_snapshot(directory, step)
+        if ok:
+            return step, skipped
+        skipped.append((step, reason))
+    return None, skipped

@@ -18,15 +18,37 @@ trace-event API (``repro.fleet.traces.install_fleet``), so FedOptima and
 all six baselines can be compared under one identical device population.
 Legacy ``churn=`` ChurnModels are materialized onto the same grid
 (``FleetTrace.from_churn`` — identical draws, bit-for-bit).
+
+Every protocol also accepts ``faults=`` (a ``repro.faults.FaultSchedule``
+or prebuilt injector): the subset of the chaos taxonomy a full-model
+protocol can express — corrupted model uploads, delayed arrivals, device
+timeouts mid-round (``repro.faults.BASELINE_CLASSES``) — is injected at
+the same named seams as FedOptima's, so clean-vs-faulted degradation is
+compared like-for-like.  ``fault_gate`` mirrors ``simulate_fedoptima``:
+None = default UpdateGate, False = no armor (poison flows into
+aggregation), an instance = used as-is.
 """
 from __future__ import annotations
 
 import numpy as np
 
 from repro.analysis import sanitize as _san
+from repro.faults.inject import FaultInjector, install_timeouts
+from repro.faults.quarantine import UpdateGate
 from repro.fleet.traces import install_fleet, resolve_fleet
 
 from .simulation import Metrics, Sim, SimCluster, SimModel
+
+
+def _resolve_injector(faults, fault_gate) -> FaultInjector | None:
+    if faults is None:
+        return None
+    if isinstance(faults, FaultInjector):
+        return faults
+    gate = UpdateGate() if fault_gate is None else (fault_gate or None)
+    return FaultInjector.for_baseline(faults, gate=gate)
+
+
 
 
 # ---------------------------------------------------------------------------
@@ -35,10 +57,12 @@ from .simulation import Metrics, Sim, SimCluster, SimModel
 
 def simulate_classic_fl(model: SimModel, cluster: SimCluster, *,
                         duration: float, H: int = 10, hooks=None,
-                        churn=None, fleet=None, seed: int = 0) -> Metrics:
+                        churn=None, fleet=None, seed: int = 0,
+                        faults=None, fault_gate=None) -> Metrics:
     sim = Sim()
     K = cluster.K
     m = Metrics(K=K, duration=duration)
+    inj = _resolve_injector(faults, fault_gate)
     t_iter = [3 * model.full_fwd_flops / cluster.dev_flops[k] for k in range(K)]
     trace = resolve_fleet(fleet, churn, cluster, duration)
     active = np.ones(K, bool)
@@ -75,11 +99,24 @@ def simulate_classic_fl(model: SimModel, cluster: SimCluster, *,
             else:
                 tx = model.full_model_bytes / bw[k]
                 m.bytes_up += model.full_model_bytes
-                sim.after(tx, arrive, k)
+                extra, ckind = inj.tag_model_upload(k, sim.t) \
+                    if inj is not None else (0.0, "")
+                sim.after(tx + extra, arrive, k, ckind, extra > 0.0)
         sim.after(t_iter[k], done)
 
-    def arrive(k):
-        if k is not None:
+    def arrive(k, ckind="", delayed=False):
+        ok = True
+        if inj is not None and k is not None:
+            if delayed:
+                # sync FL has no staleness machinery: the barrier simply
+                # waited — the delay is absorbed as round latency
+                inj.note_delayed_arrival()
+            if ckind:
+                # quarantined contribution is dropped, but its barrier
+                # slot must still release (a sync round can't wait on a
+                # poisoned update forever)
+                ok, _ = inj.model_validate(k, ckind, sim.t)
+        if k is not None and ok:
             m.note_contribution(k)
         pending["n"] -= 1
         if pending["n"] <= 0:
@@ -95,17 +132,23 @@ def simulate_classic_fl(model: SimModel, cluster: SimCluster, *,
             sim.after(dt, agg_done)
 
     install_fleet(sim, trace, active, bw)
+    install_timeouts(sim, inj, active, trace)
     start_round()
     sim.run(duration)
+    if inj is not None:
+        inj.finalize(duration)
+        m.faults = inj.report()
     return m
 
 
 def _simulate_async_full(model: SimModel, cluster: SimCluster, *, duration,
-                         H, buffer_size, hooks, churn, fleet, seed) -> Metrics:
+                         H, buffer_size, hooks, churn, fleet, seed,
+                         faults=None, fault_gate=None) -> Metrics:
     """Shared core of FedAsync (buffer_size=1) and FedBuff (buffer_size=Z)."""
     sim = Sim()
     K = cluster.K
     m = Metrics(K=K, duration=duration)
+    inj = _resolve_injector(faults, fault_gate)
     t_iter = [3 * model.full_fwd_flops / cluster.dev_flops[k] for k in range(K)]
     trace = resolve_fleet(fleet, churn, cluster, duration)
     active = np.ones(K, bool)
@@ -160,10 +203,25 @@ def _simulate_async_full(model: SimModel, cluster: SimCluster, *, duration,
             else:
                 tx = model.full_model_bytes / bw[k]
                 m.bytes_up += model.full_model_bytes
-                sim.after(tx, arrive, k, e)
+                extra, ckind = inj.tag_model_upload(k, sim.t) \
+                    if inj is not None else (0.0, "")
+                sim.after(tx + extra, arrive, k, e, ckind, extra > 0.0)
         sim.after(t_iter[k], done)
 
-    def arrive(k, e):
+    def arrive(k, e, ckind="", delayed=False):
+        if inj is not None and delayed:
+            # async aggregation absorbs stale arrivals by design (FedAsync
+            # α-decay / FedBuff buffer mixing)
+            inj.note_delayed_arrival()
+        if inj is not None and ckind:
+            ok, backoff = inj.model_validate(k, ckind, sim.t)
+            if not ok:
+                # quarantined before the buffer: the device re-downloads
+                # the current global after its strike backoff
+                tx = model.full_model_bytes / bw[k] if active[k] else 0.0
+                m.bytes_down += model.full_model_bytes if active[k] else 0.0
+                sim.after(backoff + tx, model_back, k, e)
+                return
         queue.append((k, e))
         srv["buffer"] += 1
         kick()
@@ -204,25 +262,34 @@ def _simulate_async_full(model: SimModel, cluster: SimCluster, *, duration,
 
     install_fleet(sim, trace, active, bw, on_leave=on_leave,
                   on_rejoin=on_rejoin)
+    install_timeouts(sim, inj, active, trace, on_leave=on_leave,
+                     on_rejoin=on_rejoin)
     for k in range(K):
         dev_round(k)
     sim.run(duration)
+    if inj is not None:
+        inj.finalize(duration)
+        m.faults = inj.report()
     return m
 
 
 def simulate_fedasync(model, cluster, *, duration, H=10, hooks=None,
-                      churn=None, fleet=None, seed=0) -> Metrics:
+                      churn=None, fleet=None, seed=0,
+                      faults=None, fault_gate=None) -> Metrics:
     return _simulate_async_full(model, cluster, duration=duration, H=H,
                                 buffer_size=1, hooks=hooks, churn=churn,
-                                fleet=fleet, seed=seed)
+                                fleet=fleet, seed=seed, faults=faults,
+                                fault_gate=fault_gate)
 
 
 def simulate_fedbuff(model, cluster, *, duration, H=10, buffer_size=None,
-                     hooks=None, churn=None, fleet=None, seed=0) -> Metrics:
+                     hooks=None, churn=None, fleet=None, seed=0,
+                     faults=None, fault_gate=None) -> Metrics:
     Z = buffer_size or max(2, cluster.K // 4)
     return _simulate_async_full(model, cluster, duration=duration, H=H,
                                 buffer_size=Z, hooks=hooks, churn=churn,
-                                fleet=fleet, seed=seed)
+                                fleet=fleet, seed=seed, faults=faults,
+                                fault_gate=fault_gate)
 
 
 # ---------------------------------------------------------------------------
@@ -231,7 +298,7 @@ def simulate_fedbuff(model, cluster, *, duration, H=10, buffer_size=None,
 
 def _simulate_split(model: SimModel, cluster: SimCluster, *, duration, H,
                     sync_agg: bool, pipeline: bool, hooks, churn, fleet,
-                    seed) -> Metrics:
+                    seed, faults=None, fault_gate=None) -> Metrics:
     """Split-training protocol: per iteration the device sends activations,
     the server trains that device's server-side model and returns gradients.
 
@@ -242,6 +309,7 @@ def _simulate_split(model: SimModel, cluster: SimCluster, *, duration, H,
     sim = Sim()
     K = cluster.K
     m = Metrics(K=K, duration=duration)
+    inj = _resolve_injector(faults, fault_gate)
     trace = resolve_fleet(fleet, churn, cluster, duration)
     active = np.ones(K, bool)
     bw = cluster.dev_bw.astype(float).copy()
@@ -357,10 +425,30 @@ def _simulate_split(model: SimModel, cluster: SimCluster, *, duration, H,
             else:
                 tx = model.dev_model_bytes / bw[k]
                 m.bytes_up += model.dev_model_bytes
-                sim.after(tx, model_arrive, k, e)
+                extra, ckind = inj.tag_model_upload(k, sim.t) \
+                    if inj is not None else (0.0, "")
+                sim.after(tx + extra, model_arrive, k, e, ckind,
+                          extra > 0.0)
         sim.after(t_bwd[k], bwd_done)
 
-    def model_arrive(k, e):
+    def model_arrive(k, e, ckind="", delayed=False):
+        if inj is not None and delayed:
+            inj.note_delayed_arrival()
+        if inj is not None and ckind:
+            ok, backoff = inj.model_validate(k, ckind, sim.t)
+            if not ok:
+                if sync_agg:
+                    # quarantined: the contribution is dropped but the
+                    # barrier slot still releases
+                    barrier_arrive()
+                else:
+                    # OAFL: skip aggregation; the device re-syncs after
+                    # its strike backoff
+                    tx = model.dev_model_bytes / bw[k] if active[k] else 0.0
+                    m.bytes_down += model.dev_model_bytes \
+                        if active[k] else 0.0
+                    sim.after(backoff + tx, model_back, k, e)
+                return
         if sync_agg:
             barrier_arrive()
         else:
@@ -418,34 +506,46 @@ def _simulate_split(model: SimModel, cluster: SimCluster, *, duration, H,
     install_fleet(sim, trace, active, bw,
                   on_leave=None if sync_agg else on_leave,
                   on_rejoin=None if sync_agg else on_rejoin)
+    install_timeouts(sim, inj, active, trace,
+                     on_leave=None if sync_agg else on_leave,
+                     on_rejoin=None if sync_agg else on_rejoin)
     if sync_agg:
         start_round()
     else:
         for k in range(K):
             dev_round(k)
     sim.run(duration)
+    if inj is not None:
+        inj.finalize(duration)
+        m.faults = inj.report()
     return m
 
 
 def simulate_splitfed(model, cluster, *, duration, H=10, hooks=None,
-                      churn=None, fleet=None, seed=0) -> Metrics:
+                      churn=None, fleet=None, seed=0,
+                      faults=None, fault_gate=None) -> Metrics:
     return _simulate_split(model, cluster, duration=duration, H=H,
                            sync_agg=True, pipeline=False, hooks=hooks,
-                           churn=churn, fleet=fleet, seed=seed)
+                           churn=churn, fleet=fleet, seed=seed,
+                           faults=faults, fault_gate=fault_gate)
 
 
 def simulate_pipar(model, cluster, *, duration, H=10, hooks=None,
-                   churn=None, fleet=None, seed=0) -> Metrics:
+                   churn=None, fleet=None, seed=0,
+                   faults=None, fault_gate=None) -> Metrics:
     return _simulate_split(model, cluster, duration=duration, H=H,
                            sync_agg=True, pipeline=True, hooks=hooks,
-                           churn=churn, fleet=fleet, seed=seed)
+                           churn=churn, fleet=fleet, seed=seed,
+                           faults=faults, fault_gate=fault_gate)
 
 
 def simulate_oafl(model, cluster, *, duration, H=10, hooks=None,
-                  churn=None, fleet=None, seed=0) -> Metrics:
+                  churn=None, fleet=None, seed=0,
+                  faults=None, fault_gate=None) -> Metrics:
     return _simulate_split(model, cluster, duration=duration, H=H,
                            sync_agg=False, pipeline=False, hooks=hooks,
-                           churn=churn, fleet=fleet, seed=seed)
+                           churn=churn, fleet=fleet, seed=seed,
+                           faults=faults, fault_gate=fault_gate)
 
 
 REGISTRY = {

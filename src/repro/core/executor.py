@@ -257,11 +257,22 @@ class RoundExecutor:
     registry : ElasticRegistry | None
         Optional roster mirror: drops/rejoins are recorded with the round
         index as the timestamp.
+    faults : repro.faults.PodFaultInjector | None
+        Chaos plane for pod-mode runs.  At each round head the injector
+        may raise ``InjectedCrash`` (server crash at a round boundary —
+        the driver persists the fired-crash set and resumes from the
+        checkpoint store), mask timed-out groups out of ``active`` (their
+        slots are reclaimed by the normal plan_round retire path and the
+        retained state rejoins at the recorded α), and veto poisoned
+        activation production via the update-validation gate.  ``None``
+        (the default) is a strict no-op: no branch of the round loop
+        changes.
     """
 
     def __init__(self, step, cplane, *, window: int = 1, profiles=None,
                  gather=None, scatter=None, registry=None,
-                 store=None, gather_slot=None, scatter_slot=None):
+                 store=None, gather_slot=None, scatter_slot=None,
+                 faults=None):
         if window < 1:
             raise ValueError(f"window must be >= 1, got {window}")
         self.step = step
@@ -274,6 +285,7 @@ class RoundExecutor:
         self.store = store
         self.gather_slot = gather_slot
         self.scatter_slot = scatter_slot
+        self.faults = faults
         self.stats: list[RoundStats] = []
         self.peak_in_flight = 0
         self.total_host_s = 0.0
@@ -306,6 +318,14 @@ class RoundExecutor:
                 else None
             reads = self.profiles.reads(H) if self.profiles is not None \
                 else None
+            if self.faults is not None:
+                # crash faults raise BEFORE any round-r bookkeeping, so a
+                # resumed run replans round r from identical state
+                self.faults.on_round_start(r)
+                active = self.faults.mask_active(r, active)
+                if produce is None:
+                    produce = np.ones((H, self.cplane.G), bool)
+                produce = self.faults.mask_produce(r, produce, active)
             plan = self.cplane.plan_round(active=active, produce=produce,
                                           reads=reads)
             state = self._apply_retention(state, plan, r)
@@ -334,6 +354,8 @@ class RoundExecutor:
                 checkpoint_fn(r, state)
         while self._pending:
             self._drain_one(history, on_metrics)
+        if self.faults is not None:
+            self.faults.finalize(end_round)
         return state, history
 
     # ------------------------------------------------------------------
@@ -469,4 +491,6 @@ class RoundExecutor:
         if self.store is not None:
             out["memory"] = {**self.cplane.memory_summary(),
                              **self.store.summary()}
+        if self.faults is not None:
+            out["faults"] = self.faults.report()
         return out

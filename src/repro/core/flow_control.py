@@ -124,6 +124,24 @@ class FlowController:
         if _san.TRACING:
             _san.emit("flow.dequeue", flow=self, device=k)
 
+    def on_quarantined(self, k: int):
+        """An arriving batch failed validation (poison quarantine): the
+        send happened — ``mark_sent`` moved a token into in-flight — but
+        the payload must never be buffered.  Withdraw exactly one in-flight
+        unit and re-grant, so Eq. 3 conservation holds with the quarantined
+        unit simply returned to the budget (``buffered`` is untouched: a
+        quarantined batch never entered a tier, so the spill/fill counters
+        stay exact)."""
+        n = self.inflight_by.get(k, 0)
+        if n == 1:
+            self.inflight_by.pop(k)
+        elif n > 1:
+            self.inflight_by[k] = n - 1
+        self._maybe_grant()
+        if _san.TRACING:
+            _san.emit("flow.quarantine", flow=self, device=k,
+                      withdrawn=n > 0)
+
     def on_device_left(self, k: int):
         """A device dropped with a token or an in-flight send: reclaim both,
         so ``promised`` never stays inflated under churn (otherwise grants

@@ -20,6 +20,8 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.analysis import sanitize as _san
+from repro.faults.inject import FaultInjector, install_timeouts
+from repro.faults.quarantine import UpdateGate
 from repro.fleet.devices import heterogeneous_cluster  # noqa: F401 re-export
 from repro.fleet.selection import (SelectionContext, balance_summary,
                                    make_selection_policy)
@@ -117,6 +119,10 @@ class Metrics:
                                          # for full-model methods)
     registry: object = None              # ElasticRegistry mirroring trace
                                          # join/leave events (fleet runs)
+    faults: dict = None                  # FaultInjector.report() for runs
+                                         # under a fault schedule: per-class
+                                         # injected/recovered/disposition
+                                         # counters + gate summary
 
     def __post_init__(self):
         if self.dev_busy is None:
@@ -165,7 +171,8 @@ def simulate_fedoptima(model: SimModel, cluster: SimCluster, *,
                        hooks=None, churn=None, fleet=None, selection=None,
                        registry=None, seed: int = 0,
                        control: ControlPlane | None = None,
-                       profiles: StragglerProfiles | None = None) -> Metrics:
+                       profiles: StragglerProfiles | None = None,
+                       faults=None, fault_gate=None) -> Metrics:
     """Event simulation of FedOptima.
 
     hooks (optional): object with callbacks driving real training:
@@ -209,6 +216,16 @@ def simulate_fedoptima(model: SimModel, cluster: SimCluster, *,
         ``Metrics.profiles`` so callers can feed its ``produce``/``reads``
         patterns into ``ControlPlane.plan_round`` (real straggler
         profiles, not host-supplied placeholders).
+    faults (optional): a repro.faults.FaultSchedule (or a prebuilt
+        FaultInjector) played into the run's seams — upload corruption,
+        duplicate/delayed arrivals, device timeouts, server crashes.
+        Every injected fault is matched by a recovery counter on
+        ``Metrics.faults`` (quarantine, dedupe, α-weighting, rejoin,
+        restart; see repro.faults.inject).
+    fault_gate: the poison-update validation gate paired with ``faults``:
+        None builds a default UpdateGate, an UpdateGate instance is used
+        as-is, and False disables the gate entirely (the no-armor
+        benchmark leg: poisoned updates flow into training unrecovered).
     """
     sim = Sim()
     K = cluster.K
@@ -236,6 +253,15 @@ def simulate_fedoptima(model: SimModel, cluster: SimCluster, *,
     m.profiles = prof
     sched = cp.scheduler
     flow = cp.flow
+
+    inj = None
+    if faults is not None:
+        if isinstance(faults, FaultInjector):
+            inj = faults
+        else:
+            gate = UpdateGate() if fault_gate is None else \
+                (fault_gate or None)
+            inj = FaultInjector(faults, gate=gate)
 
     trace = resolve_fleet(fleet, churn, cluster, duration)
     sel = make_selection_policy(selection, seed=seed)
@@ -274,7 +300,7 @@ def simulate_fedoptima(model: SimModel, cluster: SimCluster, *,
                                              # die, so a rejoin can never
                                              # run two chains concurrently
     versions = cp.versions            # local model version t_k
-    srv_state = {"busy": False}
+    srv_state = {"busy": False, "down": 0, "cur": None, "epoch": 0}
 
     t_iter = [(model.dev_fwd_flops + model.dev_bwd_flops) / cluster.dev_flops[k]
               for k in range(K)]
@@ -301,13 +327,20 @@ def simulate_fedoptima(model: SimModel, cluster: SimCluster, *,
         m.dev_busy[k] += sim.t - start
         m.dev_samples += model.batch_size
         prof.observe_group(k, step_s=sim.t - start)
-        send = flow.can_send(k)
+        send = flow.can_send(k) and \
+            (inj is None or inj.may_send(k, sim.t))
         if send:
             flow.mark_sent(k)
             tx = model.act_bytes / bw[k]
             prof.observe_group(k, transfer_s=tx)
             m.bytes_up += model.act_bytes
-            sim.after(tx, act_arrive, k)
+            tag = inj.tag_act_upload(k, sim.t) if inj is not None else None
+            sim.after(tx, act_arrive, k, tag)
+            if tag is not None and tag["dup_extra"] is not None:
+                # injected duplicate: the copy ships too, delayed — it may
+                # land reordered past other devices' arrivals
+                m.bytes_up += model.act_bytes
+                sim.after(tx + tag["dup_extra"], act_arrive, k, tag)
         if hooks:
             hooks.device_iter(k, send)
         if h_left > 1:
@@ -316,18 +349,33 @@ def simulate_fedoptima(model: SimModel, cluster: SimCluster, *,
             # end of round: ship device model for aggregation (Alg. 1 l.13)
             tx = model.dev_model_bytes / bw[k]
             m.bytes_up += model.dev_model_bytes
-            sim.after(tx, model_arrive, k, e)
+            extra, ckind = inj.tag_model_upload(k, sim.t) \
+                if inj is not None else (0.0, "")
+            sim.after(tx + extra, model_arrive, k, e, ckind, extra > 0.0)
 
-    def act_arrive(k):
+    def act_arrive(k, tag=None):
+        if tag is not None and tag["dup_extra"] is not None and \
+                not inj.act_dedupe(tag["seq"]):
+            return              # second delivery of a duplicated upload
         if not active[k]:
             flow.on_device_left(k)
+            return
+        poisoned = bool(tag and tag["kind"])
+        if inj is not None and not inj.act_validate(k, tag, sim.t):
+            # quarantined before it touches a queue: withdraw the in-flight
+            # unit so Eq. 3 and the Alg. 3 counters stay conserved
+            flow.on_quarantined(k)
             return
         if not flow.on_enqueue(k):
             # zombie packet: the sender dropped (its in-flight budget was
             # reclaimed) and rejoined before this arrival — reject it so
             # the ω cap stays strict
             return
-        sched.put(Message("activation", k, size_bytes=model.act_bytes,
+        if inj is not None and not poisoned:
+            inj.note_accept(k)          # clean update: forgive one strike
+        sched.put(Message("activation", k,
+                          content="poison" if poisoned else None,
+                          size_bytes=model.act_bytes,
                           enqueued_at=sim.t))
         m.max_buffered = max(m.max_buffered, sched.total_buffered)
         cp.note_buffered(sched.total_buffered)
@@ -338,7 +386,21 @@ def simulate_fedoptima(model: SimModel, cluster: SimCluster, *,
                 f"promised={flow.promised} of cap={flow.cap}")
         kick_server()
 
-    def model_arrive(k, e):
+    def model_arrive(k, e, ckind="", delayed=False):
+        if inj is not None and delayed:
+            # late arrival (possibly past max_delay): Alg. 4's staleness
+            # weighting at aggregation is the armor — nothing to drop here
+            inj.note_delayed_arrival()
+        if inj is not None and ckind:
+            ok, backoff = inj.model_validate(k, ckind, sim.t)
+            if not ok:
+                # quarantined: the poisoned update never reaches Q_model;
+                # re-sync the device after its strike backoff so the chain
+                # survives without consuming the update
+                tx = model.dev_model_bytes / bw[k] if active[k] else 0.0
+                m.bytes_down += model.dev_model_bytes if active[k] else 0.0
+                sim.after(backoff + tx, model_return, k, e)
+                return
         # the shipping chain's epoch rides the message so the eventual
         # model_return can tell a pre-departure upload from a live one
         sched.put(Message("model", k, content=(int(versions[k]), int(e))))
@@ -346,22 +408,27 @@ def simulate_fedoptima(model: SimModel, cluster: SimCluster, *,
 
     # ---------------- server engine ----------------
     def kick_server():
-        if srv_state["busy"]:
+        if srv_state["busy"] or srv_state["down"]:
             return
         msg = sched.get()
         if msg is None:
             return
         srv_state["busy"] = True
+        srv_state["cur"] = msg
         if msg.kind == "model":
             dt = model.agg_flops / cluster.srv_flops
             sim.after(dt, server_agg_done, msg.origin, sim.t,
-                      msg.content[1])
+                      msg.content[1], srv_state["epoch"])
         else:
             flow.on_dequeue(msg.origin)
             dt = model.srv_flops_per_batch / cluster.srv_flops
-            sim.after(dt, server_train_done, msg.origin, sim.t)
+            sim.after(dt, server_train_done, msg.origin, sim.t,
+                      msg.content == "poison", srv_state["epoch"])
 
-    def server_agg_done(k, start, e):
+    def server_agg_done(k, start, e, se=0):
+        if se != srv_state["epoch"]:
+            return                      # in-service work lost to a crash
+        srv_state["cur"] = None
         m.srv_busy += sim.t - start
         m.aggregations += 1
         if cp.aggregate_arrival(k, versions[k]) > 0.0 and hooks:
@@ -385,11 +452,18 @@ def simulate_fedoptima(model: SimModel, cluster: SimCluster, *,
         running[k] = False
         device_start_round(k, H)
 
-    def server_train_done(k, start):
+    def server_train_done(k, start, poisoned=False, se=0):
+        if se != srv_state["epoch"]:
+            return                      # in-service work lost to a crash
+        srv_state["cur"] = None
         m.srv_busy += sim.t - start
         m.srv_batches += 1
         m.note_contribution(k)
         prof.observe_server(sim.t - start)
+        if poisoned:
+            # no-gate leg: the poison reached server training (badput —
+            # the faults benchmark subtracts these from goodput)
+            inj.note_disposition("consumed_poisoned_act")
         if hooks:
             hooks.server_train(k)
         srv_state["busy"] = False
@@ -419,6 +493,33 @@ def simulate_fedoptima(model: SimModel, cluster: SimCluster, *,
                       epoch=int(epoch[k]))
         device_start_round(k, H)
 
+    # ---------------- injected fault windows ----------------
+    def crash_begin(outage_s):
+        inj.note_injected("server_crash")
+        srv_state["down"] += 1
+        srv_state["epoch"] += 1         # pending completions die stale
+        cur = srv_state["cur"]
+        if srv_state["busy"] and cur is not None:
+            if cur.kind == "model":
+                # a lost model update would strand its device (model_return
+                # never fires): requeue it — durable Q_model survives the
+                # outage, only in-service compute is lost
+                sched.put(cur)
+                inj.note_disposition("lost_model_requeued")
+            else:
+                # the batch's flow token was released at dequeue: dropping
+                # it keeps Eq. 3 conserved, the work is simply lost
+                inj.note_disposition("lost_act_batch")
+        srv_state["cur"] = None
+        srv_state["busy"] = False
+        sim.after(outage_s, crash_end)
+
+    def crash_end():
+        srv_state["down"] -= 1
+        inj.note_recovered("server_crash", "crash_restart")
+        if not srv_state["down"]:
+            kick_server()
+
     def reselect():
         """Re-draw the participation cohort from the available devices
         (fed the live Alg. 3 counters + staleness accounting).  Devices
@@ -442,6 +543,14 @@ def simulate_fedoptima(model: SimModel, cluster: SimCluster, *,
     install_fleet(sim, trace, active, bw, on_leave=on_leave,
                   on_rejoin=on_rejoin,
                   after_tick=reselect if sel is not None else None)
+    if inj is not None:
+        install_timeouts(sim, inj, active, trace,
+                         on_leave=on_leave, on_rejoin=on_rejoin)
+        for ev in inj.crashes():
+            sim.at(ev.t, crash_begin, float(ev.param))
     sim.run(duration)
     m.duration = duration
+    if inj is not None:
+        inj.finalize(duration)
+        m.faults = inj.report()
     return m

@@ -1,0 +1,185 @@
+"""Kill-at-every-round-boundary crash sweep for the pod driver.
+
+The acceptance harness for crash-consistent recovery: for each round
+boundary, a child training process is SIGKILLed at the checkpoint seam —
+either just *after* a snapshot commits (``after``: the classic crash
+between rounds) or *mid-write* (``mid``: the process dies with a partial
+temp dir on disk and no commit, exercising the atomic temp+rename path) —
+then restarted.  The restarted run must
+
+* resume from the newest **verified** snapshot (a mid-write kill leaves
+  only uncommitted garbage, so it falls back one boundary),
+* finish sanitizer-clean (the child runs under ``--sanitize``; any
+  protocol invariant violation is a non-zero exit), and
+* reach a **bit-exact** final state: the final snapshot's per-array CRC32
+  manifest and the host-loop continuation state (batch RNG) must equal an
+  uninterrupted same-seed reference run's.  Checksums cover every leaf of
+  the train state, so manifest equality *is* array equality.
+
+Run directly (``python -m repro.faults.crash_harness --rounds 6``) or
+from pytest via :func:`sweep`.  ``--child`` is the internal re-exec mode:
+it monkeypatches ``checkpoint.store.save`` to SIGKILL itself at the
+target step, then drives ``launch.train.main``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import signal
+import subprocess
+import sys
+import tempfile
+
+from repro.checkpoint import store
+
+_SIGKILLED = -signal.SIGKILL
+
+
+def _child_main(a) -> None:
+    """Re-exec target: run pod training, dying at the kill step."""
+    from repro.launch import train
+
+    real_save = store.save
+
+    def killing_save(directory, step, tree, metadata=None, retain=3,
+                     extras=None):
+        if a.kill_mode == "mid" and step == a.kill_step:
+            # die mid-write: a temp dir exists, nothing was committed —
+            # exactly what a power cut during np.savez leaves behind
+            os.makedirs(directory, exist_ok=True)
+            tmp = tempfile.mkdtemp(dir=directory,
+                                   prefix=f".tmp_step_{step:08d}_")
+            with open(os.path.join(tmp, "arrays.npz"), "wb") as f:
+                f.write(b"partial write, never committed")
+                f.flush()
+                os.fsync(f.fileno())
+            os.kill(os.getpid(), signal.SIGKILL)
+        path = real_save(directory, step, tree, metadata=metadata,
+                         retain=retain, extras=extras)
+        if a.kill_mode == "after" and step == a.kill_step:
+            os.kill(os.getpid(), signal.SIGKILL)
+        return path
+
+    store.save = killing_save
+    sys.argv = ["train", "--mode", "pod", "--rounds", str(a.rounds),
+                "--ckpt-dir", a.ckpt_dir, "--ckpt-every", str(a.ckpt_every),
+                "--batch", "4", "--seq-len", "32", "--seed", str(a.seed),
+                "--log-every", "1000000", "--sanitize"]
+    train.main()
+
+
+def _run_child(ckpt_dir: str, rounds: int, ckpt_every: int, seed: int,
+               kill_step: int = -1, kill_mode: str = "after",
+               timeout: float = 600.0) -> int:
+    cmd = [sys.executable, "-m", "repro.faults.crash_harness", "--child",
+           "--ckpt-dir", ckpt_dir, "--rounds", str(rounds),
+           "--ckpt-every", str(ckpt_every), "--seed", str(seed),
+           "--kill-step", str(kill_step), "--kill-mode", kill_mode]
+    env = dict(os.environ)
+    root = os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    env["PYTHONPATH"] = root + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(cmd, env=env, timeout=timeout,
+                          capture_output=True, text=True)
+    if proc.returncode not in (0, _SIGKILLED):
+        raise RuntimeError(
+            f"crash-sweep child failed unexpectedly (exit "
+            f"{proc.returncode}, kill_step={kill_step}, "
+            f"kill_mode={kill_mode}):\n{proc.stdout}\n{proc.stderr}")
+    return proc.returncode
+
+
+def _final_fingerprint(ckpt_dir: str, rounds: int) -> dict:
+    """Bit-exactness witness: the final snapshot's CRC32 manifest plus the
+    host-loop RNG continuation state."""
+    step, skipped = store.latest_verified_step(ckpt_dir)
+    if step != rounds:
+        raise RuntimeError(f"expected a verified final snapshot at step "
+                           f"{rounds} in {ckpt_dir}, found {step} "
+                           f"(skipped: {skipped})")
+    meta = store._load_manifest(ckpt_dir, step)
+    return {"checksums": meta["checksums"],
+            "extra_checksums": meta.get("extra_checksums"),
+            "rng_state": json.loads(json.dumps(
+                meta["metadata"].get("rng_state")))}
+
+
+def sweep(boundaries=None, *, rounds: int = 4, ckpt_every: int = 1,
+          seed: int = 0, kill_modes=("after", "mid"),
+          workdir: str | None = None, verbose: bool = False) -> dict:
+    """Kill a pod run at each checkpoint boundary, resume it, and verify
+    bit-exact, sanitizer-clean continuation against an uninterrupted
+    reference.  Returns the per-case results dict (raises on any
+    divergence)."""
+    if boundaries is None:
+        boundaries = list(range(ckpt_every, rounds + 1, ckpt_every))
+    tmp_ctx = tempfile.TemporaryDirectory() if workdir is None else None
+    base = workdir if workdir is not None else tmp_ctx.name
+    try:
+        ref_dir = os.path.join(base, "reference")
+        code = _run_child(ref_dir, rounds, ckpt_every, seed)
+        if code != 0:
+            raise RuntimeError(f"reference run exited {code}")
+        ref = _final_fingerprint(ref_dir, rounds)
+        results = {}
+        for mode in kill_modes:
+            for s in boundaries:
+                case = f"{mode}@{s}"
+                d = os.path.join(base, f"kill_{mode}_{s}")
+                killed = _run_child(d, rounds, ckpt_every, seed,
+                                    kill_step=s, kill_mode=mode)
+                if killed != _SIGKILLED:
+                    raise RuntimeError(
+                        f"{case}: child was not SIGKILLed (exit {killed}) "
+                        "— the kill step never fired")
+                resumed = _run_child(d, rounds, ckpt_every, seed)
+                if resumed != 0:
+                    raise RuntimeError(f"{case}: resumed run exited "
+                                       f"{resumed} (sanitizer violation or "
+                                       "crash)")
+                got = _final_fingerprint(d, rounds)
+                if got != ref:
+                    raise RuntimeError(
+                        f"{case}: resumed run is NOT bit-exact with the "
+                        f"reference —\n  ref: {ref}\n  got: {got}")
+                results[case] = "bit-exact"
+                if verbose:
+                    print(f"crash sweep {case}: resumed bit-exact, "
+                          "sanitizer-clean")
+        return {"rounds": rounds, "boundaries": list(boundaries),
+                "kill_modes": list(kill_modes), "cases": results}
+    finally:
+        if tmp_ctx is not None:
+            tmp_ctx.cleanup()
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--child", action="store_true",
+                   help="internal: run one (possibly self-killing) child")
+    p.add_argument("--ckpt-dir", default=None)
+    p.add_argument("--rounds", type=int, default=4)
+    p.add_argument("--ckpt-every", type=int, default=1)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--kill-step", type=int, default=-1,
+                   help="checkpoint step to SIGKILL at (-1: never)")
+    p.add_argument("--kill-mode", default="after", choices=("after", "mid"))
+    p.add_argument("--boundaries", default=None,
+                   help="comma-separated kill boundaries (default: every "
+                        "checkpoint step)")
+    a = p.parse_args()
+    if a.child:
+        if not a.ckpt_dir:
+            raise SystemExit("--child requires --ckpt-dir")
+        _child_main(a)
+        return
+    boundaries = [int(x) for x in a.boundaries.split(",")] \
+        if a.boundaries else None
+    out = sweep(boundaries, rounds=a.rounds, ckpt_every=a.ckpt_every,
+                seed=a.seed, verbose=True)
+    print(json.dumps(out, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -40,6 +40,7 @@ Examples::
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import time
 
@@ -54,6 +55,9 @@ from repro.core.control_plane import ControlPlane
 from repro.core.executor import RoundExecutor, StragglerProfiles
 from repro.data.partitioner import dirichlet_partition
 from repro.data.synthetic import lm_dataset
+from repro.faults import (POD_CLASSES, SIM_CLASSES, FaultSchedule,
+                          InjectedCrash, PodFaultInjector, UpdateGate,
+                          make_fault_schedule)
 from repro.fleet import (FleetTrace, SelectionContext, balance_summary,
                          make_selection_policy, make_trace, sample_cluster)
 from repro.launch.mesh import make_debug_mesh, n_groups_of
@@ -86,6 +90,24 @@ def _fleet_trace(args, K: int, horizon: float, interval: float,
         kw["bw"] = bw
     return make_trace(spec, K, horizon, interval=interval,
                       seed=args.seed, **kw)
+
+
+def _fault_schedule(args, K: int, horizon: float,
+                    classes) -> FaultSchedule | None:
+    """Resolve --faults: a JSON artifact path (fault-schedule-v1), or
+    ``random[:density]`` — a seeded schedule over the mode's supported
+    fault classes (sim: time axis seconds; pod: time axis round index)."""
+    spec = getattr(args, "faults", None)
+    if spec is None:
+        return None
+    if spec.endswith(".json") or os.path.exists(spec):
+        return FaultSchedule.load(spec)
+    kind, _, dens = spec.partition(":")
+    if kind != "random":
+        raise ValueError(f"unknown --faults spec {spec!r}: expected a "
+                         "schedule JSON path or 'random[:density]'")
+    return make_fault_schedule(K, horizon, seed=args.seed, classes=classes,
+                               density=float(dens) if dens else 1.0)
 
 
 # ---------------------------------------------------------------------------
@@ -154,11 +176,42 @@ def run_pod(args) -> dict:
                           pool_cap=pool_cap, eviction=eviction)
     act_store = ActivationStore(pool_cap, quant=spill_quant)
 
+    # chaos plane (pod axis: round index) — built before resume so a
+    # restarted run replays the SAME schedule, minus already-fired crashes
+    faults_sched = _fault_schedule(args, G, float(max(args.rounds, 1)),
+                                   POD_CLASSES)
+    injector, fired_path = None, None
+    if faults_sched is not None:
+        needs_store = any(e.cls in ("server_crash", "torn_checkpoint")
+                          for e in faults_sched.events)
+        if needs_store and not args.ckpt_dir:
+            raise ValueError(
+                "--faults schedules server_crash/torn_checkpoint events: "
+                "--ckpt-dir is required so fired crash boundaries persist "
+                "across restarts and recovery has a store to resume from")
+        fired = ()
+        if args.ckpt_dir:
+            # a crash can fire before the first snapshot creates the dir
+            os.makedirs(args.ckpt_dir, exist_ok=True)
+            fired_path = os.path.join(args.ckpt_dir, "FAULTS_FIRED.json")
+            if os.path.exists(fired_path):
+                with open(fired_path) as f:
+                    fired = tuple(json.load(f))
+        injector = PodFaultInjector(faults_sched, gate=UpdateGate(),
+                                    fired_crashes=fired)
+
     like = jax.eval_shape(lambda: F.init_train_state(
         jax.random.PRNGKey(args.seed), cfg))
     start_round = 0
-    if args.ckpt_dir and store.latest_step(args.ckpt_dir) is not None:
-        start_round = store.latest_step(args.ckpt_dir)
+    resumed_meta = None
+    verified_step = None
+    if args.ckpt_dir:
+        verified_step, skipped = store.latest_verified_step(args.ckpt_dir)
+        for bad_step, reason in skipped:
+            print(f"resume: skipping torn snapshot step {bad_step}: "
+                  f"{reason}")
+    if verified_step is not None:
+        start_round = verified_step
         state = store.restore(args.ckpt_dir, start_round, like)
         if "act_buf" in state:
             ring = jax.tree.leaves(state["act_buf"])[0].shape[0]
@@ -210,6 +263,7 @@ def run_pod(args) -> dict:
                     args.ckpt_dir, start_round,
                     {str(g): slice_like for g in cplane.retention.groups}))
         state = jax.device_put(state, s_spec)
+        resumed_meta = meta
         print(f"resumed from round {start_round}")
     else:
         state = jax.jit(lambda: F.init_train_state(
@@ -217,6 +271,11 @@ def run_pod(args) -> dict:
 
     streams = _group_streams(cfg, seed=args.seed)
     rng = np.random.default_rng(args.seed + start_round)
+    if resumed_meta and "rng_state" in resumed_meta:
+        # bit-exact continuation: restore the batch RNG mid-stream instead
+        # of reseeding (reseeding resumes a DIFFERENT run than the one
+        # that crashed — same distribution, different batches)
+        rng.bit_generator.state = resumed_meta["rng_state"]
 
     # Fleet emulation (repro.fleet): --fleet-trace maps one trace tick to
     # one round (the pod roster for round r is trace row r, wrapping past
@@ -251,6 +310,14 @@ def run_pod(args) -> dict:
         profiles = StragglerProfiles(G, step_s=1.0 / caps)
     if profiles is None:
         profiles = StragglerProfiles(G)
+    if resumed_meta and "profiles" in resumed_meta:
+        # restore the measured EMAs so the resumed run plans the same
+        # produce/reads patterns the crashed run would have
+        ps = resumed_meta["profiles"]
+        profiles = StragglerProfiles(
+            G, beta=ps.get("beta", 0.25), step_s=ps.get("step_s"),
+            transfer_s=ps.get("transfer_s"), server_s=ps.get("server_s"))
+        profiles.n_obs = int(ps.get("n_obs", 0))
     executor = RoundExecutor(
         jitted, cplane, window=window,
         profiles=profiles,
@@ -261,7 +328,12 @@ def run_pod(args) -> dict:
         store=act_store,
         gather_slot=F.gather_act_slot,
         scatter_slot=lambda st, s, p: F.scatter_act_slot(
-            st, s, p, state_shardings=s_spec))
+            st, s, p, state_shardings=s_spec),
+        faults=injector)
+
+    if sel is not None and resumed_meta and "selection_rng" in resumed_meta \
+            and hasattr(sel, "_rng"):
+        sel._rng.bit_generator.state = resumed_meta["selection_rng"]
 
     def active_fn(r):
         if fleet is not None:
@@ -305,17 +377,35 @@ def run_pod(args) -> dict:
             extras["retention"] = cplane.retention.arrays()
         if act_store.arrays():
             extras["spill"] = act_store.arrays()
-        store.save(args.ckpt_dir, r + 1, host_state,
-                   metadata={"round": r + 1, "arch": arch.name,
-                             "control_plane": cplane.state_dict(),
-                             "spill_store": act_store.meta_dict()},
+        metadata = {"round": r + 1, "arch": arch.name,
+                    "control_plane": cplane.state_dict(),
+                    "spill_store": act_store.meta_dict(),
+                    # host-loop continuation state: what a resumed run
+                    # needs for bit-exact replay past this snapshot
+                    "rng_state": rng.bit_generator.state,
+                    "profiles": profiles.summary()}
+        if sel is not None and hasattr(sel, "_rng"):
+            metadata["selection_rng"] = sel._rng.bit_generator.state
+        store.save(args.ckpt_dir, r + 1, host_state, metadata=metadata,
                    extras=extras or None)
+        if injector is not None:
+            injector.on_checkpoint(r, args.ckpt_dir, r + 1)
 
-    state, history = executor.run(
-        state, start_round, args.rounds,
-        active_fn=active_fn, batch_fn=batch_fn, on_metrics=on_metrics,
-        checkpoint_every=args.ckpt_every if args.ckpt_dir else 0,
-        checkpoint_fn=checkpoint_fn if args.ckpt_dir else None)
+    try:
+        state, history = executor.run(
+            state, start_round, args.rounds,
+            active_fn=active_fn, batch_fn=batch_fn, on_metrics=on_metrics,
+            checkpoint_every=args.ckpt_every if args.ckpt_dir else 0,
+            checkpoint_fn=checkpoint_fn if args.ckpt_dir else None)
+    except InjectedCrash as crash:
+        # persist the fired boundary FIRST, then die: the restarted run
+        # resumes from the newest verified snapshot and must not re-fire
+        if fired_path is not None:
+            with open(fired_path, "w") as f:
+                json.dump(sorted(injector.fired_crashes), f)
+        print(f"faults: {crash} (fired boundaries "
+              f"{sorted(injector.fired_crashes)}) — restart to resume")
+        raise
     mem = {**cplane.memory_summary(), **act_store.summary()}
     print(f"memory: spills {mem['spills']}  fills {mem['fills']}  "
           f"evictions {mem['evictions']}  peak pool "
@@ -333,9 +423,15 @@ def run_pod(args) -> dict:
         print(f"fleet: trace={fleet.meta.get('kind', 'custom')}  "
               f"roster events={absences}  "
               f"selection={sel.describe() if sel else 'all'}")
-    return {"history": history, "final": history[-1] if history else None,
-            "executor": executor.summary(), "memory": mem,
-            "consumed": consumed.tolist(), "contribution_balance": bal}
+    out = {"history": history, "final": history[-1] if history else None,
+           "executor": executor.summary(), "memory": mem,
+           "consumed": consumed.tolist(), "contribution_balance": bal}
+    if injector is not None:
+        fr = injector.report()
+        print(f"faults: injected={fr['injected']}  "
+              f"recovered={fr['recovered']}  matched={fr['matched']}")
+        out["faults"] = fr
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -388,13 +484,15 @@ def run_sim(args) -> dict:
     control = ControlPlane.for_sim(args.devices, omega, policy=policy,
                                    max_delay=max_delay, pool_cap=pool_cap)
     profiles = StragglerProfiles(args.devices)
+    faults_sched = _fault_schedule(args, args.devices, args.duration,
+                                   SIM_CLASSES)
     metrics = simulate_fedoptima(sim_model, cluster, duration=args.duration,
                                  omega=omega, H=H, policy=policy,
                                  max_delay=max_delay, pool_cap=pool_cap,
                                  seed=args.seed, fleet=fleet,
                                  selection=getattr(args, "selection", None),
                                  hooks=learner, control=control,
-                                 profiles=profiles)
+                                 profiles=profiles, faults=faults_sched)
     xte, yte = data.x[:512], data.y[:512]
     acc = learner.eval_accuracy(xte, yte)
     # the measured per-device profiles drive a straggler-aware plan: slow
@@ -423,15 +521,21 @@ def run_sim(args) -> dict:
             else "identity"     # selection-only runs get an identity trace
         print(f"fleet: trace={kind}  roster events={absences}  active now "
               f"{len(metrics.registry.active_ids)}/{args.devices}")
-    return {"accuracy": acc, "srv_idle": metrics.srv_idle_frac,
-            "dev_idle": metrics.dev_idle_frac,
-            "throughput": metrics.throughput,
-            "profiles": profiles.summary(),
-            "produce_per_round": produce.sum(axis=0).tolist(),
-            "reads_per_round": int(reads.sum()),
-            "memory": mem,
-            "consumed": metrics.dev_consumed.tolist(),
-            "contribution_balance": bal}
+    out = {"accuracy": acc, "srv_idle": metrics.srv_idle_frac,
+           "dev_idle": metrics.dev_idle_frac,
+           "throughput": metrics.throughput,
+           "profiles": profiles.summary(),
+           "produce_per_round": produce.sum(axis=0).tolist(),
+           "reads_per_round": int(reads.sum()),
+           "memory": mem,
+           "consumed": metrics.dev_consumed.tolist(),
+           "contribution_balance": bal}
+    if metrics.faults is not None:
+        fr = metrics.faults
+        print(f"faults: injected={fr['injected']}  "
+              f"recovered={fr['recovered']}  matched={fr['matched']}")
+        out["faults"] = fr
+    return out
 
 
 def main() -> None:
@@ -504,6 +608,15 @@ def main() -> None:
                         "runs the most-stale half each tick).  Fed the "
                         "Alg. 3 consumption counters + staleness "
                         "accounting; default: every available device")
+    p.add_argument("--faults", default=None,
+                   help="chaos plane (repro.faults): a fault-schedule JSON "
+                        "path, or 'random[:density]' — a seeded schedule "
+                        "of corrupt uploads, duplicates, delays, device "
+                        "timeouts, server crashes and checkpoint tears.  "
+                        "Sim mode injects at the event seams (time axis "
+                        "seconds); pod mode at round boundaries (crash/"
+                        "tear faults need --ckpt-dir; an injected crash "
+                        "kills the run — rerun the same command to resume)")
     p.add_argument("--sanitize", action=argparse.BooleanOptionalAction,
                    default=False,
                    help="run under the protocol sanitizer "

@@ -11,10 +11,15 @@ Two layers of resilience:
 
 2. **Checkpoint/restart** for the server job itself: `CheckpointPolicy`
    decides when to snapshot (step cadence + wall-clock cadence), and
-   `resume_or_init` restores the latest committed snapshot after a crash.
+   `resume_or_init` restores the newest committed snapshot that passes
+   integrity verification (``store.verify_snapshot``) after a crash —
+   a snapshot torn after commit is skipped and reported, never
+   half-loaded.
 """
 from __future__ import annotations
 
+import math
+import sys
 import time
 from dataclasses import dataclass, field
 
@@ -32,13 +37,19 @@ class ChurnModel:
     bw_hi: float = 50e6 / 8
     seed: int = 0
 
-    def __post_init__(self):
-        self._rng = np.random.default_rng(self.seed)
-
     def draw(self, t: float):
-        """State for interval starting at time t: (active mask, bandwidths)."""
-        active = self._rng.random(self.n_devices) >= self.p_drop
-        bw = self._rng.uniform(self.bw_lo, self.bw_hi, size=self.n_devices)
+        """State for the interval containing time t: (active mask, bw).
+
+        The draw is a pure function of ``(seed, interval_index)`` — NOT of
+        how many times / in what order ``draw`` was called — so the
+        availability at time t is the same whether a consumer replays the
+        whole grid (``FleetTrace.from_churn``), queries one boundary, or
+        re-queries after a crash/resume mid-run.
+        """
+        idx = int(math.floor(t / self.interval + 1e-9))
+        rng = np.random.default_rng([self.seed, idx])
+        active = rng.random(self.n_devices) >= self.p_drop
+        bw = rng.uniform(self.bw_lo, self.bw_hi, size=self.n_devices)
         return active, bw
 
 
@@ -57,22 +68,41 @@ class CheckpointPolicy:
                now - self._last_time >= self.every_seconds)
         return due
 
-    def save(self, step: int, tree, metadata=None):
-        path = store.save(self.directory, step, tree, metadata, self.retain)
+    def note_resume(self, step: int):
+        """Seed the cadence from a resumed step so the first
+        ``should_save`` after restart measures from the restored snapshot,
+        not from the dataclass defaults (``_last_step=0`` would otherwise
+        make a resume at step 5000 save again immediately)."""
+        self._last_step = int(step)
+        self._last_time = time.monotonic()
+
+    def save(self, step: int, tree, metadata=None, extras=None):
+        path = store.save(self.directory, step, tree, metadata, self.retain,
+                          extras=extras)
         self._last_step = step
         self._last_time = time.monotonic()
         return path
 
 
-def resume_or_init(directory: str, init_fn, like=None):
-    """Restore latest committed snapshot, else build fresh state.
+def resume_or_init(directory: str, init_fn, like=None, policy=None):
+    """Restore the newest *verified* snapshot, else build fresh state.
 
     init_fn() -> state pytree; `like` defaults to init_fn()'s structure.
-    Returns (state, start_step).
+    Snapshots that fail integrity verification (torn payload, checksum
+    mismatch, unreadable manifest) are skipped with a warning — the next
+    older retained snapshot is tried, so a tear can cost at most the
+    retention window, never a half-loaded state.  When ``policy`` (a
+    :class:`CheckpointPolicy`) is given, its save cadence is seeded from
+    the resumed step.  Returns (state, start_step).
     """
-    step = store.latest_step(directory)
+    step, skipped = store.latest_verified_step(directory)
+    for bad_step, reason in skipped:
+        print(f"resume_or_init: skipping torn snapshot step {bad_step}: "
+              f"{reason}", file=sys.stderr)
     template = like if like is not None else init_fn()
     if step is None:
         return template, 0
     state = store.restore(directory, step, template)
+    if policy is not None:
+        policy.note_resume(step)
     return state, step
