@@ -23,13 +23,13 @@ comparison is goodput_clean >= goodput_recovered >> goodput_unarmored's
 """
 from __future__ import annotations
 
-import json
 import os
 
 from repro.core.simulation import simulate_fedoptima
 from repro.faults import make_fault_schedule
 from repro.fleet import diurnal_trace, sample_cluster
 
+from . import common
 from .common import (MOBILENET_SPLIT, OMEGA, Row, bench_duration,
                      fedoptima_control, timed)
 
@@ -109,8 +109,7 @@ def main() -> list[Row]:
         raise RuntimeError("faults/faulted_recovery: injected faults were "
                            f"not all matched by recovery: {rec}")
 
-    with open(OUT_PATH, "w") as fh:
-        json.dump(record, fh, indent=2, sort_keys=True)
+    common.write_record(OUT_PATH, record)
     rows.append(Row("faults/json", 0.0, f"wrote={os.path.basename(OUT_PATH)}"))
     return rows
 

@@ -11,13 +11,13 @@ fleet-wide).  Results are written to ``BENCH_fleet.json``.
 """
 from __future__ import annotations
 
-import json
 import os
 
 from repro.core.baselines import REGISTRY
 from repro.core.simulation import simulate_fedoptima
 from repro.fleet import diurnal_trace, sample_cluster
 
+from . import common
 from .common import (MOBILENET_SPLIT, OMEGA, Row, bench_duration,
                      fedoptima_control, timed)
 
@@ -82,8 +82,7 @@ def main() -> list[Row]:
         rows.append(Row(f"fleet/{name}", us, _derived(m)))
         record["baselines"][name] = _entry(m)
 
-    with open(OUT_PATH, "w") as fh:
-        json.dump(record, fh, indent=2, sort_keys=True)
+    common.write_record(OUT_PATH, record)
     rows.append(Row("fleet/json", 0.0, f"wrote={os.path.basename(OUT_PATH)}"))
     return rows
 

@@ -12,7 +12,6 @@ the window deltas — are written to ``BENCH_idle.json``.
 """
 from __future__ import annotations
 
-import json
 import os
 
 from repro.core.baselines import REGISTRY
@@ -21,7 +20,8 @@ from repro.core.simulation import simulate_fedoptima
 from . import common
 from .common import (MOBILENET_SPLIT, OMEGA, Row, TRANSFORMER6_SPLIT,
                      VGG5_SPLIT, bench_duration, executor_overlap,
-                     fedoptima_control, testbed_a, testbed_b, timed)
+                     fedoptima_control, testbed_a, testbed_b, timed,
+                     write_record)
 
 OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_idle.json")
 
@@ -83,6 +83,14 @@ def run_executor_overlap(model, cluster, tag, record):
                   "host_ms_hidden_per_round": hidden_ms,
                   "host_exposed_frac_before": idle_before,
                   "host_exposed_frac_after": idle_after,
+                  # steady-state exposure excludes each window's warmup
+                  # dispatches (nothing in flight to hide behind yet)
+                  "host_s_exposed_steady_before":
+                      sync["host_s_exposed_steady"],
+                  "host_s_exposed_steady_after":
+                      pipe["host_s_exposed_steady"],
+                  "hidden_host_frac_steady":
+                      pipe["hidden_host_frac_steady"],
                   "rounds_in_flight": pipe["peak_in_flight"]}}
     return rows
 
@@ -131,8 +139,7 @@ def main() -> list[Row]:
     rows += run(TRANSFORMER6_SPLIT, testbed_a(), "A_transformer6", record)
     rows += run_executor_overlap(VGG5_SPLIT, testbed_a(), "A_vgg5", record)
     rows += run_sanitizer_overhead(VGG5_SPLIT, testbed_a(), "A_vgg5", record)
-    with open(OUT_PATH, "w") as fh:
-        json.dump(record, fh, indent=2, sort_keys=True)
+    write_record(OUT_PATH, record)
     rows.append(Row("idle/json", 0.0, f"wrote={os.path.basename(OUT_PATH)}"))
     return rows
 

@@ -11,7 +11,6 @@ kernels.
 """
 from __future__ import annotations
 
-import json
 import os
 
 import jax
@@ -20,6 +19,7 @@ import jax.numpy as jnp
 from repro.kernels import ops, ref
 from repro.models.attention import sdpa_chunked
 
+from . import common
 from .common import Row, timed
 
 OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
@@ -99,8 +99,7 @@ def main() -> list[Row]:
     record: dict = {"backend": jax.default_backend(),
                     "interpret": ops._interpret(), "repeat": REPEAT}
     rows = _bench_attention(record) + _bench_ssd(record)
-    with open(OUT_PATH, "w") as fh:
-        json.dump(record, fh, indent=2, sort_keys=True)
+    common.write_record(OUT_PATH, record)
     rows.append(Row("kernels/json", 0.0,
                     f"wrote={os.path.basename(OUT_PATH)}"))
     return rows

@@ -20,7 +20,6 @@ Results ride ``BENCH_memory.json``; honors ``--smoke`` / ``BENCH_SMOKE``.
 """
 from __future__ import annotations
 
-import json
 import os
 
 import numpy as np
@@ -202,8 +201,7 @@ def main() -> list[Row]:
     rows += eq_curves(mu_model, mu_act, record)
     rows += sim_cap_rows(record)
     rows += tiered_store_rows(mu_act, record)
-    with open(OUT_PATH, "w") as fh:
-        json.dump(record, fh, indent=2, sort_keys=True)
+    common.write_record(OUT_PATH, record)
     rows.append(Row("memory/json", 0.0, f"wrote={os.path.basename(OUT_PATH)}"))
     return rows
 

@@ -3,10 +3,18 @@
 Testbed A: 8 devices (Raspberry Pi classes, 4 speed groups), CPU server,
 50 Mbps links.  Testbed B: 16 devices (Jetson classes), GPU server,
 100 Mbps links.  Speed ratios follow Table 3; absolute scales are nominal
-(the figures reproduce *relative* orderings — see DESIGN.md §7)."""
+(the figures reproduce *relative* orderings — see DESIGN.md §7).
+
+Every ``BENCH_*.json`` record should be written through
+:func:`write_record`, which stamps an ``env`` block (backend, device
+kind, jax/numpy versions, interpret-mode flag, smoke flag) so numbers
+like the kernel suite's cpu-interpret timings are self-describing
+instead of relying on out-of-band knowledge of where they ran."""
 from __future__ import annotations
 
+import json
 import os
+import platform
 import time
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass
@@ -29,6 +37,32 @@ def bench_duration(default: float, smoke: float = 30.0) -> float:
     if SMOKE:
         return smoke
     return float(os.environ.get("BENCH_DUR", default))
+
+
+def env_meta() -> dict:
+    """Execution-environment stamp for benchmark records: which backend
+    produced the numbers (cpu ⇒ Pallas kernels ran in interpret mode —
+    shape/semantics checks, not device performance), under which jax."""
+    import jax
+    dev = jax.devices()[0]
+    return {"jax_version": jax.__version__,
+            "numpy_version": np.__version__,
+            "backend": dev.platform,
+            "device_kind": dev.device_kind,
+            "n_devices": jax.device_count(),
+            "pallas_interpret": dev.platform == "cpu",
+            "python": platform.python_version(),
+            "platform": platform.platform(),
+            "smoke": SMOKE}
+
+
+def write_record(path: str, record: dict) -> None:
+    """Write one BENCH_*.json record, stamped with :func:`env_meta`
+    (callers may pre-set ``env`` to override)."""
+    record.setdefault("env", env_meta())
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2)
+    print(f"wrote {path}")
 
 
 def fedoptima_control(cluster: SimCluster, omega: int = OMEGA,
@@ -135,7 +169,13 @@ class StubDevice:
 def executor_overlap(model: SimModel, cluster: SimCluster, *, H: int = 8,
                      rounds: int = 20, window: int = 2,
                      sim_time_scale: float = 0.004,
-                     host_frac: float = 0.4) -> dict:
+                     host_frac: float = 0.4,
+                     host_burst_every: int = 0,
+                     host_burst_frac: float = 1.0,
+                     checkpoint_every: int = 0,
+                     checkpoint_flush: bool = False,
+                     ckpt_save_s: float | None = None,
+                     state_bytes: int = 0) -> dict:
     """Measure RoundExecutor overlap on a modeled workload.
 
     The stub device round is the testbed's lockstep cost — H × the
@@ -144,9 +184,21 @@ def executor_overlap(model: SimModel, cluster: SimCluster, *, H: int = 8,
     benchmark wall seconds, clamped to [10 ms, 100 ms] so every testbed
     finishes quickly but still dwarfs scheduler noise).  Host batch
     assembly is modeled at ``host_frac`` of the device round (the pod
-    driver's Python-side shard packing).  Returns wall/round for the
-    given window plus the executor's own overlap accounting — run with
-    window=1 vs 2 to get the hidden-host-time delta.
+    driver's Python-side shard packing); every ``host_burst_every``-th
+    round costs ``host_burst_frac`` × that (periodic host spikes — re-
+    partitioning, logging, GC — the load deep windows exist to amortize:
+    a window shallower than the burst cadence exposes each spike).
+
+    ``checkpoint_every`` > 0 models the save path: ``ckpt_save_s``
+    (default 1.5 × the device round — np.savez of a real state dwarfs
+    one round) is slept per save, after a full pipeline drain when
+    ``checkpoint_flush`` else via the deferred no-flush handle path.
+    ``state_bytes`` sizes a real numpy state dict so handle-ring/
+    checkpoint byte accounting is measured, not modeled.
+
+    Returns wall/round for the given window plus the executor's own
+    overlap accounting (incl. steady-state exposure excluding the
+    ``window`` warmup rounds, handle-ring peaks, and save counters).
     """
     from repro.core.executor import RoundExecutor
 
@@ -155,21 +207,37 @@ def executor_overlap(model: SimModel, cluster: SimCluster, *, H: int = 8,
     round_sim_s = H * float(t_iter.max())
     round_s = float(np.clip(round_sim_s * sim_time_scale, 0.01, 0.1))
     host_s = host_frac * round_s
+    save_s = 1.5 * round_s if ckpt_save_s is None else float(ckpt_save_s)
     cp = ControlPlane(cluster.K, OMEGA, H)
+    state = {"params": np.zeros(max(state_bytes, 4) // 4, np.float32)} \
+        if state_bytes else 0
 
     def batch_fn(r, plan):
-        time.sleep(host_s)      # modeled host batch-assembly cost
+        mult = host_burst_frac if host_burst_every and \
+            r % host_burst_every == 0 else 1.0
+        time.sleep(host_s * mult)   # modeled host batch-assembly cost
         return {}
+
+    def checkpoint_fn(r, handle):
+        time.sleep(save_s)          # modeled np.savez + fsync
+
+    ckpt_kw = {}
+    if checkpoint_every:
+        ckpt_kw = dict(checkpoint_every=checkpoint_every,
+                       checkpoint_fn=checkpoint_fn,
+                       capture_fn=lambda r: None,
+                       checkpoint_flush=checkpoint_flush)
 
     with StubDevice(round_s) as dev:
         ex = RoundExecutor(dev.step, cp, window=window)
         t0 = time.perf_counter()
-        _, hist = ex.run(0, 0, rounds,
+        _, hist = ex.run(state, 0, rounds,
                          active_fn=lambda r: np.ones(cluster.K, bool),
-                         batch_fn=batch_fn)
+                         batch_fn=batch_fn, **ckpt_kw)
         wall = time.perf_counter() - t0
     out = ex.summary()
     out.update(wall_s=wall, wall_s_per_round=wall / max(rounds, 1),
+               rounds_per_s=max(rounds, 1) / wall,
                round_sim_s=round_sim_s, stub_round_s=round_s,
                host_s_modeled=host_s, rounds_completed=len(hist),
                plan_us=1e6 * float(np.mean([s.plan_s for s in ex.stats]))

@@ -9,10 +9,15 @@ Layout::
 
 Crash consistency is layered:
 
-* **atomic commit** — writes go to a temp dir and are renamed into place,
-  so a crash mid-write never corrupts the store; ``latest_step`` ignores
-  uncommitted snapshots (a missing COMMITTED marker = the rename never
-  happened).
+* **atomic commit** — writes go to a temp dir, every file (and the temp
+  dir itself) is fsynced, then the dir is renamed into place; a crash
+  mid-write never corrupts the store, and a committed rename implies the
+  payload bytes are durable (rename-before-data is the classic torn-
+  checkpoint bug checkpoint-without-flush would otherwise widen — the
+  save now runs while later rounds are still in flight, so the window
+  between "save returned" and "data on disk" overlaps live training).
+  ``latest_step`` ignores uncommitted snapshots (a missing COMMITTED
+  marker = the rename never happened).
 * **per-array checksums** — the manifest records a CRC32 per leaf
   (``checksums`` / ``extra_checksums``), so a snapshot torn AFTER commit
   (bit rot, truncation, a partial copy) is detected at restore instead of
@@ -64,6 +69,25 @@ def _checksums(flat: dict[str, np.ndarray]) -> dict[str, int]:
     return {k: _crc(v) for k, v in flat.items()}
 
 
+def _fsync_file(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _fsync_dir(path: str) -> None:
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return          # platforms without O_RDONLY dirs: best effort
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
 def save(directory: str, step: int, tree: Any, metadata: dict | None = None,
          retain: int = 3, extras: Any = None) -> str:
     os.makedirs(directory, exist_ok=True)
@@ -87,9 +111,18 @@ def save(directory: str, step: int, tree: Any, metadata: dict | None = None,
             json.dump(meta, f)
         with open(os.path.join(tmp, "COMMITTED"), "w") as f:
             f.write("ok")
+        # durability before visibility: every payload byte must be on disk
+        # before the rename makes the snapshot discoverable — otherwise a
+        # power cut after commit leaves a COMMITTED marker over torn data
+        # (the checksums would catch it, but the snapshot is lost; with
+        # fsync it is never lost)
+        for fname in os.listdir(tmp):
+            _fsync_file(os.path.join(tmp, fname))
+        _fsync_dir(tmp)
         if os.path.exists(final):
             shutil.rmtree(final)
         os.rename(tmp, final)
+        _fsync_dir(directory)     # persist the rename itself
     except BaseException:
         shutil.rmtree(tmp, ignore_errors=True)
         raise

@@ -97,6 +97,12 @@ class RoundPlan:
     # (fills BEFORE spills, so the pool never transiently exceeds its cap)
     fill: tuple = ()         # (pool_key, slot): pool entry -> free ring slot
     spill: tuple = ()        # (slot, pool_key): evicted ring slot -> pool
+    # prefetch is PLAN-NEUTRAL: pool keys the fill policy would pick next
+    # (the executor's in-flight window is the lookahead horizon) — the
+    # store pre-decodes their payloads so the eventual fill is a copy,
+    # not a decode.  No bookkeeping moves; plans are bit-identical with
+    # lookahead on or off.
+    prefetch: tuple = ()     # pool keys to pre-stage host-side
 
     def batch_fields(self) -> dict:
         """The plan as jit-step batch fields (see fedopt_step.SCHEDULE_KEYS
@@ -241,7 +247,8 @@ class ControlPlane:
     # pod path: plan one round of H micro-iterations
     # ------------------------------------------------------------------
 
-    def plan_round(self, active=None, produce=None, reads=None) -> RoundPlan:
+    def plan_round(self, active=None, produce=None, reads=None, *,
+                   lookahead: int = 0) -> RoundPlan:
         """Plan H micro-iterations and commit the bookkeeping.
 
         active : (G,) bool — groups participating in this round (drive
@@ -252,6 +259,12 @@ class ControlPlane:
             new scheduled batch; default all (lockstep server).  A False
             entry re-reads the last consumed slot (the server never idles —
             Fig. 1(d) — but consumes no new buffered batch).
+        lookahead : int — prefetch horizon (the executor's in-flight
+            window): the ``lookahead`` pool entries the fill policy ranks
+            highest AFTER this round's fills ride the plan as
+            ``prefetch`` so the store can pre-decode them.  Strictly
+            plan-neutral: schedules, moves and bookkeeping are
+            bit-identical for any value.
 
         The plan is deterministic, and the bookkeeping (scheduler counters,
         flow tokens, peak buffers) is committed immediately: in the lockstep
@@ -301,7 +314,8 @@ class ControlPlane:
                          agg_weight=self.agg_weights(active),
                          bcast_mask=active.astype(np.float32),
                          retire=retire, restore=restore,
-                         fill=fill, spill=tuple(self._round_spills))
+                         fill=fill, spill=tuple(self._round_spills),
+                         prefetch=self._plan_prefetch(lookahead))
         if _san.TRACING:
             _san.emit("cp.plan", cp=self, plan=plan,
                       version=int(self.version),
@@ -415,6 +429,19 @@ class ControlPlane:
             moves.append((int(key), int(s)))
             self.n_fills += 1
         return tuple(moves)
+
+    def _plan_prefetch(self, lookahead: int) -> tuple:
+        """The ``lookahead`` pool entries the fill policy ranks highest in
+        the post-round pool — what the next boundaries' fills will want.
+        Ranking reuses the SAME pure ``fill_order`` the fills use, and
+        nothing here mutates scheduler/flow/pool state: prefetch is
+        advisory staging, never a planning decision."""
+        if lookahead <= 0 or not self._pool:
+            return ()
+        order = self.mem_policy.fill_order(
+            list(self._pool), groups_of=lambda k: self._pool[k],
+            share=self.consumption_share)
+        return tuple(int(k) for k in order[:lookahead])
 
     def _spill_for_write(self) -> int | None:
         """Evict one live ring slot to the host pool, freeing it for this

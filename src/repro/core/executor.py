@@ -49,6 +49,7 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.analysis import sanitize as _san
+from repro.core.handles import HandleRing, RoundHandle
 
 
 # ---------------------------------------------------------------------------
@@ -248,12 +249,15 @@ class RoundExecutor:
         slot host↔mesh (``fedopt_step.gather_act_slot`` /
         ``scatter_act_slot``).  Planned ``fill``/``spill`` moves run at
         the round boundary, inside the in-flight window.  Fills and the
-        host-side bookkeeping stay fully async, but a SPILL gathers
-        pre-round ring content, so its ``np.asarray`` synchronizes on
-        the in-flight rounds' act_buf output — a targeted sync on the
-        ring only (model/optimizer state stays in flight), paid once
-        per spill round.  Fills run before spills, so the pool never
-        transiently exceeds its cap.
+        host-side bookkeeping stay fully async; a SPILL gathers
+        pre-round ring content from the previous round's HANDLE (the
+        donation-safe ``jnp.copy`` snapshot taken at dispatch) when one
+        exists, so deep windows never synchronize on the live ring —
+        the live-state ``np.asarray`` sync remains only as the
+        window=1 / unwired fallback.  Fills run before spills, so the
+        pool never transiently exceeds its cap; a slot filled and
+        re-spilled at the same boundary spills the fill payload itself
+        (the handle predates the fill).
     registry : ElasticRegistry | None
         Optional roster mirror: drops/rejoins are recorded with the round
         index as the timestamp.
@@ -293,22 +297,56 @@ class RoundExecutor:
         self._pending: deque = deque()     # (RoundStats, metrics futures)
         self._last_drain_t: float | None = None
         self._last_completion_t: float | None = None
+        # -- donation-safe per-round handle ring --------------------------
+        # With window > 1 the donated step invalidates older rounds' state
+        # references, so every leaf a LATER boundary may need (retention
+        # gathers read dev/aux; spill gathers read act_buf) is snapshotted
+        # into the ring at dispatch (one fused on-device copy; D2H happens
+        # lazily per consumed slice).  Capture is ADAPTIVE so workloads
+        # that never consume a handle never pay for one: act_buf is
+        # captured only while a spill pool is active, and dev/aux only
+        # once churn has been observed — the first churned boundary falls
+        # back to the live-state gather (value-identical: the live state
+        # at a boundary IS the previous round's output, not yet donated).
+        # window=1 consumers always read the live state synchronously.
+        self._churn_seen = False
+        self.handles = HandleRing(depth=window + 1)
+        self._deferred: deque[RoundHandle] = deque()   # no-flush saves
+        self.n_ckpt_flush = 0        # saves behind a full pipeline drain
+        self.n_ckpt_noflush = 0      # saves from a handle, pipe in flight
+        self.handle_bytes_peak = 0   # ring + deferred high-water mark
 
     # ------------------------------------------------------------------
     def run(self, state, start_round: int, end_round: int, *, active_fn,
             batch_fn, on_metrics=None, checkpoint_every: int = 0,
-            checkpoint_fn=None):
+            checkpoint_fn=None, capture_fn=None, checkpoint_flush=None):
         """Drive rounds [start_round, end_round).
 
         active_fn(r) -> (G,) bool roster for round r (host RNG lives with
         the caller, consumed in dispatch order — window-invariant).
         batch_fn(r, plan) -> jit batch for round r.
         on_metrics(r, metrics, stats) fires at drain, in round order.
-        checkpoint_fn(r, state): called with the post-round-r state after
-        a full pipeline flush, so the saved arrays and the ControlPlane
-        snapshot describe the same round (matching the synchronous loop's
-        save point exactly).
+
+        Checkpointing comes in two shapes:
+
+        * **legacy flush** (``capture_fn=None``): the pipeline is fully
+          drained at the due boundary and ``checkpoint_fn(r, state)`` is
+          called with the live post-round-r state — the synchronous
+          loop's save point exactly.
+        * **checkpoint-without-flush** (``capture_fn`` given): at the due
+          boundary a donation-safe :class:`RoundHandle` of the full state
+          is captured at DISPATCH (on-device copies + async D2H), with
+          ``capture_fn(r)`` providing the dispatch-time host metadata
+          (ControlPlane snapshot, RNG state, extras) so arrays and
+          bookkeeping describe the same round.  ``checkpoint_fn(r,
+          handle)`` then runs once the handle's copies are ready — rounds
+          r+1..r+window stay in flight the whole time, and the save never
+          lags more than ``window`` rounds behind (forced at the end of
+          the run).  Pass ``checkpoint_flush=True`` to keep the drain
+          while still receiving handles (the flush-vs-no-flush A/B).
         """
+        flush = (capture_fn is None) if checkpoint_flush is None \
+            else bool(checkpoint_flush)
         history: list[dict] = []
         for r in range(start_round, end_round):
             t0 = time.perf_counter()
@@ -326,8 +364,9 @@ class RoundExecutor:
                 if produce is None:
                     produce = np.ones((H, self.cplane.G), bool)
                 produce = self.faults.mask_produce(r, produce, active)
-            plan = self.cplane.plan_round(active=active, produce=produce,
-                                          reads=reads)
+            plan = self.cplane.plan_round(
+                active=active, produce=produce, reads=reads,
+                lookahead=self.window if self.store is not None else 0)
             state = self._apply_retention(state, plan, r)
             state = self._apply_memory(state, plan, r)
             t1 = time.perf_counter()
@@ -345,18 +384,79 @@ class RoundExecutor:
             self._pending.append((st, metrics))
             self.peak_in_flight = max(self.peak_in_flight,
                                       len(self._pending))
+            due = checkpoint_fn is not None and checkpoint_every and \
+                (r + 1) % checkpoint_every == 0
+            self._capture_round(r, state, due and not flush, capture_fn)
             while len(self._pending) >= self.window:
                 self._drain_one(history, on_metrics)
-            if checkpoint_fn is not None and checkpoint_every and \
-                    (r + 1) % checkpoint_every == 0:
+            if due and flush:
                 while self._pending:          # flush: state == round r
                     self._drain_one(history, on_metrics)
-                checkpoint_fn(r, state)
+                if capture_fn is None:
+                    checkpoint_fn(r, state)   # legacy (r, state) contract
+                else:
+                    # drained pipe: the live tree is stable until the next
+                    # dispatch, so the handle wraps it without copying
+                    checkpoint_fn(r, RoundHandle.capture(
+                        r, state, meta=capture_fn(r), copy=False))
+                self.n_ckpt_flush += 1
+            self._service_deferred(checkpoint_fn, now=r)
         while self._pending:
             self._drain_one(history, on_metrics)
+        self._service_deferred(checkpoint_fn, force=True)
         if self.faults is not None:
             self.faults.finalize(end_round)
         return state, history
+
+    # ------------------------------------------------------------------
+    def _light_keys(self) -> tuple:
+        """Leaves the NEXT boundary's consumers may slice from this
+        round's handle.  Adaptive: no spill pool and no churn so far
+        means no keys — and no per-round copy cost."""
+        if self.window <= 1:
+            return ()
+        keys = []
+        if self.gather is not None and self._churn_seen:
+            keys += ["dev", "aux"]
+        if self.store is not None and \
+                getattr(self.cplane, "pool_cap", 0) > 0:
+            keys += ["act_buf"]
+        return tuple(keys)
+
+    def _capture_round(self, r: int, state, ckpt_due: bool, capture_fn):
+        """Dispatch-time handle capture: the light per-round snapshot of
+        retention-/spill-referenced leaves into the ring, plus (when a
+        no-flush checkpoint is due) a full-state handle with async D2H
+        staging queued for the deferred saver."""
+        keys = self._light_keys()
+        light = keys and isinstance(state, dict)
+        if not (light or ckpt_due):
+            return
+        if ckpt_due:
+            meta = capture_fn(r) if capture_fn is not None else None
+            h = RoundHandle.capture(r, state, meta=meta, to_host=True)
+            self._deferred.append(h)
+        if light:
+            self.handles.push(RoundHandle.capture(r, state, keys=keys))
+        self.handle_bytes_peak = max(
+            self.handle_bytes_peak,
+            self.handles.nbytes + sum(h.nbytes for h in self._deferred))
+
+    def _service_deferred(self, checkpoint_fn, *, now=None,
+                          force: bool = False):
+        """Run deferred no-flush saves whose device copies completed.
+        A save is forced once its round falls a full window behind (or
+        at the end of the run), bounding checkpoint lag — in-order
+        execution means the copy is all but certainly done by then, so
+        the force is a consistency backstop, not a stall in practice."""
+        while self._deferred:
+            h = self._deferred[0]
+            if not (force or h.ready()
+                    or (now is not None and now - h.round >= self.window)):
+                break
+            self._deferred.popleft()
+            checkpoint_fn(h.round, h)
+            self.n_ckpt_noflush += 1
 
     # ------------------------------------------------------------------
     def _apply_retention(self, state, plan, r: int):
@@ -376,8 +476,20 @@ class RoundExecutor:
                 f"round {r} restores groups {plan.restore} but this "
                 "executor has no scatter fn — per-group retention must be "
                 "wired for runs with churn")
+        if plan.retire or plan.restore:
+            # from here on, dev/aux ride the handle ring (this boundary's
+            # gathers use the ring when a handle exists, else the live
+            # state — the same values either way)
+            self._churn_seen = True
+        h = self.handles.get(r - 1) if plan.retire else None
         for g in plan.retire:
-            cp.retain_group(g, self.gather(state, g))
+            if h is not None and h.has("dev"):
+                # donation-safe: slice the previous round's handle (its
+                # post-step dev/aux copies ARE this boundary's pre-round
+                # values) instead of syncing the live, soon-donated state
+                cp.retain_group(g, h.group_state(g))
+            else:
+                cp.retain_group(g, self.gather(state, g))
             if self.registry is not None:
                 self.registry.leave(g, t=float(r))
         for g in plan.restore:
@@ -398,8 +510,9 @@ class RoundExecutor:
         """Perform the plan's tiered-store moves (host↔mesh ring-slot
         transfers) before dispatch.  Fills first — a fill frees the pool
         entry a same-boundary spill may need — then spills of pre-round
-        ring content into the host pool."""
-        if not (plan.fill or plan.spill):
+        ring content into the host pool, then plan-neutral prefetch
+        staging of lookahead pool entries."""
+        if not (plan.fill or plan.spill or plan.prefetch):
             return state
         if self.store is None or self.gather_slot is None or \
                 self.scatter_slot is None:
@@ -409,10 +522,27 @@ class RoundExecutor:
                 "has no ActivationStore wiring — pass store=/gather_slot=/"
                 "scatter_slot= (fedopt_step.gather_act_slot/"
                 "scatter_act_slot) for runs with pool_cap > 0")
+        filled: dict[int, dict] = {}
         for key, s in plan.fill:
-            state = self.scatter_slot(state, s, self.store.fill(key))
+            payload = self.store.fill(key)
+            filled[s] = payload
+            state = self.scatter_slot(state, s, payload)
+        h = self.handles.get(r - 1) if plan.spill else None
         for s, key in plan.spill:
-            self.store.spill(key, self.gather_slot(state, s))
+            if s in filled:
+                # fill-then-spill of the same slot at one boundary: the
+                # handle predates the fill, so the ring content being
+                # spilled IS the fill payload just scattered — reuse it
+                # (bit-identical to a live gather-after-scatter)
+                self.store.spill(key, filled[s])
+            elif h is not None and h.has("act_buf"):
+                # donation-safe: slice the previous round's ring handle
+                # instead of syncing the live (about-to-donate) ring
+                self.store.spill(key, h.act_slot(s))
+            else:
+                self.store.spill(key, self.gather_slot(state, s))
+        for key in plan.prefetch:
+            self.store.prefetch(key)
         return state
 
     def _check_cap(self, r: int):
@@ -471,8 +601,18 @@ class RoundExecutor:
 
     # ------------------------------------------------------------------
     def summary(self) -> dict:
-        """JSON-able overlap accounting for logs / benchmarks."""
+        """JSON-able overlap accounting for logs / benchmarks.
+
+        Besides whole-run totals, reports STEADY-STATE exposure excluding
+        the first ``window`` dispatches: those warmup rounds have no (or
+        a partial) in-flight round to hide behind, so including them
+        biases deep-window comparisons against exactly the windows they
+        are meant to evaluate."""
         n = len(self.stats)
+        warmup = min(n, self.window)
+        steady = self.stats[warmup:]
+        host_steady = sum(s.plan_s + s.build_s for s in steady)
+        hidden_steady = sum(s.hidden_host_s for s in steady)
         out = {
             "rounds": n,
             "window": self.window,
@@ -485,6 +625,14 @@ class RoundExecutor:
             "device_s_per_round":
                 float(np.mean([s.round_wall_s for s in self.stats]))
                 if n else 0.0,
+            "warmup_rounds_excluded": warmup,
+            "host_s_exposed_steady": host_steady - hidden_steady,
+            "hidden_host_frac_steady":
+                hidden_steady / host_steady if host_steady > 0 else 0.0,
+            "handles": self.handles.summary(),
+            "handle_bytes_peak": int(self.handle_bytes_peak),
+            "checkpoints": {"flush_saves": self.n_ckpt_flush,
+                            "noflush_saves": self.n_ckpt_noflush},
         }
         if self.profiles is not None:
             out["profiles"] = self.profiles.summary()

@@ -598,6 +598,24 @@ def jit_train_step(cfg: FedStepConfig, mesh, *, donate: bool = True):
 # Per-group state retention (dropped groups — §3.4.2)
 # ---------------------------------------------------------------------------
 
+def snapshot_state(state: Params, keys=None, *, to_host: bool = False) \
+        -> Params:
+    """Donation-safe snapshot of the train state (or the ``keys`` subset):
+    ``jnp.copy`` per device leaf enqueues fresh, never-donated buffers in
+    dispatch order, so the copy reads the current round's output before
+    the next donated dispatch aliases it (see ``core/handles.py`` for the
+    full contract).  With ``to_host=True`` every leaf also starts its
+    async D2H transfer immediately (checkpoint staging).
+
+    This is THE way to keep a reference into a past round's state under
+    ``jit_train_step(..., donate=True)`` at window > 1 — a plain Python
+    reference is invalid the moment the next round dispatches."""
+    from repro.core.handles import snapshot_tree
+    src = state if keys is None else \
+        {k: state[k] for k in keys if k in state}
+    return snapshot_tree(src, to_host=to_host)
+
+
 def gather_act_slot(state: Params, s: int) -> dict:
     """Host copies of activation-ring slot ``s`` (spill path of the tiered
     store, ``repro.memory``): one scheduled batch — acts, labels and any
@@ -606,7 +624,10 @@ def gather_act_slot(state: Params, s: int) -> dict:
     Blocks only until the act_buf leaves are materialized: under
     pipelined dispatch this waits for the rounds already in flight, and
     only on the ring (one slot's read is sliced host-side), never on the
-    model params."""
+    model params.  With donation at window > 1 the executor gathers from
+    a :class:`~repro.core.handles.RoundHandle` (``handle.act_slot``)
+    instead — this live-state sync remains the window=1 / unwired
+    fallback, where the values are identical."""
     return jax.tree.map(lambda x: np.asarray(x[s]), state["act_buf"])
 
 
@@ -635,7 +656,10 @@ def gather_group_state(state: Params, g: int) -> dict:
     Blocks until those leaves are materialized (a targeted device→host
     sync): under pipelined dispatch this waits only for the rounds already
     in flight, and only on the small device-side block, not the server
-    params."""
+    params.  With donation at window > 1 the executor gathers from a
+    :class:`~repro.core.handles.RoundHandle` (``handle.group_state``)
+    instead — this live-state sync remains the window=1 / unwired
+    fallback, where the values are identical."""
     take = lambda tree: jax.tree.map(lambda x: np.asarray(x[g]), tree)
     return {"dev": take(state["dev"]), "aux": take(state["aux"])}
 

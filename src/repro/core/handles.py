@@ -1,0 +1,210 @@
+"""Donation-safe per-round state handles for the deep pipeline.
+
+``jit_train_step`` donates its state argument (``donate_argnums=(0,)``):
+the round-r output buffers are aliased into round r+1's inputs, so any
+Python reference the driver keeps into round r's state is INVALID the
+moment round r+1 dispatches.  That is what pinned the executor at
+shallow windows — checkpoints had to drain the whole pipeline, and every
+retention/spill gather had to run against the live (about-to-be-donated)
+state.
+
+A :class:`RoundHandle` makes a round's state outlive donation without
+turning donation off:
+
+* **on-device copy at dispatch** — ``jnp.copy`` on each captured leaf
+  enqueues a copy program *after* round r's step and *before* round
+  r+1's; in-order execution guarantees the copy reads round r's output
+  before the donated write clobbers it.  The copies are fresh buffers
+  (never donated), so they stay valid for as long as the handle lives.
+* **async device→host staging** — ``copy_to_host_async`` starts the D2H
+  transfer without blocking the dispatch thread (the orbax async-
+  checkpoint idiom); ``ready()`` polls completion via ``is_ready`` and
+  ``host_tree()`` materializes numpy copies, blocking only on the
+  transfers themselves, never on unrelated in-flight rounds.
+* **lazy slicing** — retention/spill consumers read one group or ring
+  slot; ``group_state``/``act_slot`` slice the on-device copy and
+  transfer just that slice, so light per-round handles (captured with
+  ``to_host=False``) cost one fused copy and pay D2H per needed slice.
+
+A :class:`HandleRing` keeps the last ``depth`` per-round handles with
+byte accounting, so the executor can resolve "state as of round r" for
+any round still inside the in-flight window.
+
+This module is dependency-light on purpose (numpy + jax only, imported
+lazily) so benchmark stubs and unit tests can use it without pulling in
+the model stack.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+
+import numpy as np
+
+
+def _is_jax_array(x) -> bool:
+    return hasattr(x, "is_ready") and hasattr(x, "copy_to_host_async")
+
+
+_jit_copy = None
+
+
+def _fused_copy(leaves: list):
+    """One jitted copy program over all jax leaves — a single dispatch
+    per snapshot (per-leaf ``jnp.copy`` calls cost one host dispatch
+    each, which is real overhead on the pipelined hot path)."""
+    global _jit_copy
+    if _jit_copy is None:
+        import jax
+        import jax.numpy as jnp
+        _jit_copy = jax.jit(lambda xs: [jnp.copy(x) for x in xs])
+    return _jit_copy(leaves)
+
+
+def snapshot_tree(tree, *, to_host: bool = False):
+    """Donation-safe copy of a pytree: jax leaves go through one fused
+    jitted copy (fresh, never-donated device buffers, enqueued in
+    dispatch order), numpy leaves are copied host-side, scalars pass
+    through.  ``to_host`` starts the async D2H transfer on every jax
+    leaf immediately."""
+    import jax
+
+    leaves, treedef = jax.tree.flatten(tree)
+    idx = [i for i, x in enumerate(leaves) if _is_jax_array(x)]
+    if idx:
+        for i, y in zip(idx, _fused_copy([leaves[i] for i in idx])):
+            if to_host:
+                y.copy_to_host_async()
+            leaves[i] = y
+    jax_idx = set(idx)
+    leaves = [np.array(x, copy=True)
+              if i not in jax_idx and isinstance(x, np.ndarray) else x
+              for i, x in enumerate(leaves)]
+    return jax.tree.unflatten(treedef, leaves)
+
+
+def _tree_nbytes(tree) -> int:
+    import jax
+
+    return sum(int(x.nbytes) for x in jax.tree.leaves(tree)
+               if hasattr(x, "nbytes"))
+
+
+class RoundHandle:
+    """One round's captured state: donation-safe device copies plus any
+    dispatch-time metadata the eventual consumer (checkpoint saver,
+    retention gather, spill gather) needs.
+
+    ``meta`` carries host-side bookkeeping snapshotted at the SAME
+    dispatch point as the arrays (e.g. the ControlPlane state_dict and
+    RNG state for checkpoint-without-flush), so arrays and metadata
+    always describe the same round.
+    """
+
+    def __init__(self, round_: int, tree, *, meta=None):
+        self.round = int(round_)
+        self.tree = tree
+        self.meta = meta
+        self._host = None
+
+    @classmethod
+    def capture(cls, round_: int, state, *, keys=None, meta=None,
+                copy: bool = True, to_host: bool = False) -> "RoundHandle":
+        """Snapshot ``state`` (or the ``keys`` subset of a dict state) at
+        dispatch time.  ``copy=False`` wraps the live tree without
+        copying — only safe when the pipeline is already drained and the
+        handle is consumed before the next donating dispatch (the legacy
+        flush path)."""
+        src = state
+        if keys is not None and isinstance(state, dict):
+            src = {k: state[k] for k in keys if k in state}
+        tree = snapshot_tree(src, to_host=to_host) if copy else src
+        return cls(round_, tree, meta=meta)
+
+    # -- readiness / materialization ------------------------------------
+    def ready(self) -> bool:
+        """True when every captured device leaf has materialized (the
+        copy programs and any staged D2H transfers completed) — a save
+        can proceed without stalling the dispatch thread."""
+        import jax
+
+        return all(x.is_ready() for x in jax.tree.leaves(self.tree)
+                   if _is_jax_array(x))
+
+    def host_tree(self):
+        """Numpy copies of the captured tree (blocks only on this
+        handle's own transfers); cached after the first call."""
+        import jax
+
+        if self._host is None:
+            self._host = jax.tree.map(np.asarray, self.tree)
+        return self._host
+
+    # -- lazy slicing for retention / spill consumers -------------------
+    def has(self, key: str) -> bool:
+        return isinstance(self.tree, dict) and key in self.tree
+
+    def group_state(self, g: int) -> dict:
+        """One group's dev/aux slices from the captured stacks (the
+        retention-gather payload), transferring only the slices."""
+        import jax
+
+        take = lambda tree: jax.tree.map(lambda x: np.asarray(x[g]), tree)
+        return {"dev": take(self.tree["dev"]), "aux": take(self.tree["aux"])}
+
+    def act_slot(self, s: int) -> dict:
+        """One activation-ring slot from the captured ring (the spill
+        payload), transferring only the slice."""
+        import jax
+
+        return jax.tree.map(lambda x: np.asarray(x[s]),
+                            self.tree["act_buf"])
+
+    @property
+    def nbytes(self) -> int:
+        return _tree_nbytes(self.tree)
+
+    def __repr__(self) -> str:
+        return (f"RoundHandle(round={self.round}, "
+                f"nbytes={self.nbytes}, ready={self.ready()})")
+
+
+class HandleRing:
+    """Bounded ring of the last ``depth`` per-round handles.
+
+    Eviction is purely positional (oldest round out); dropping a handle
+    releases its device copies to the allocator.  ``peak_bytes`` tracks
+    the high-water mark of simultaneously-held handle bytes — the
+    pipeline-depth memory cost the benchmarks report.
+    """
+
+    def __init__(self, depth: int):
+        if depth < 1:
+            raise ValueError(f"need depth >= 1, got {depth}")
+        self.depth = depth
+        self._ring: OrderedDict[int, RoundHandle] = OrderedDict()
+        self.n_captured = 0
+        self.peak_bytes = 0
+
+    def push(self, handle: RoundHandle) -> None:
+        self._ring[handle.round] = handle
+        self._ring.move_to_end(handle.round)
+        while len(self._ring) > self.depth:
+            self._ring.popitem(last=False)
+        self.n_captured += 1
+        self.peak_bytes = max(self.peak_bytes, self.nbytes)
+
+    def get(self, round_: int) -> RoundHandle | None:
+        return self._ring.get(int(round_))
+
+    def __len__(self) -> int:
+        return len(self._ring)
+
+    @property
+    def nbytes(self) -> int:
+        return sum(h.nbytes for h in self._ring.values())
+
+    def summary(self) -> dict:
+        return {"depth": self.depth, "held": len(self._ring),
+                "captured": self.n_captured,
+                "bytes": int(self.nbytes),
+                "peak_bytes": int(self.peak_bytes)}

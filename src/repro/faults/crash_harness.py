@@ -65,17 +65,24 @@ def _child_main(a) -> None:
     sys.argv = ["train", "--mode", "pod", "--rounds", str(a.rounds),
                 "--ckpt-dir", a.ckpt_dir, "--ckpt-every", str(a.ckpt_every),
                 "--batch", "4", "--seq-len", "32", "--seed", str(a.seed),
+                "--window", str(a.window),
                 "--log-every", "1000000", "--sanitize"]
+    if a.ckpt_flush:
+        sys.argv.append("--ckpt-flush")
     train.main()
 
 
 def _run_child(ckpt_dir: str, rounds: int, ckpt_every: int, seed: int,
                kill_step: int = -1, kill_mode: str = "after",
-               timeout: float = 600.0) -> int:
+               timeout: float = 600.0, window: int = 2,
+               ckpt_flush: bool = False) -> subprocess.CompletedProcess:
     cmd = [sys.executable, "-m", "repro.faults.crash_harness", "--child",
            "--ckpt-dir", ckpt_dir, "--rounds", str(rounds),
            "--ckpt-every", str(ckpt_every), "--seed", str(seed),
-           "--kill-step", str(kill_step), "--kill-mode", kill_mode]
+           "--kill-step", str(kill_step), "--kill-mode", kill_mode,
+           "--window", str(window)]
+    if ckpt_flush:
+        cmd.append("--ckpt-flush")
     env = dict(os.environ)
     root = os.path.dirname(os.path.dirname(os.path.dirname(
         os.path.abspath(__file__))))
@@ -87,7 +94,7 @@ def _run_child(ckpt_dir: str, rounds: int, ckpt_every: int, seed: int,
             f"crash-sweep child failed unexpectedly (exit "
             f"{proc.returncode}, kill_step={kill_step}, "
             f"kill_mode={kill_mode}):\n{proc.stdout}\n{proc.stderr}")
-    return proc.returncode
+    return proc
 
 
 def _final_fingerprint(ckpt_dir: str, rounds: int) -> dict:
@@ -105,22 +112,43 @@ def _final_fingerprint(ckpt_dir: str, rounds: int) -> dict:
                 meta["metadata"].get("rng_state")))}
 
 
+def _assert_no_flush(proc: subprocess.CompletedProcess, case: str) -> None:
+    """No-flush contract witness: the driver reports its save counters
+    (``checkpoints: flush_saves=N noflush_saves=M``) — a run configured
+    for checkpoint-without-flush must never have drained the pipeline
+    for a save."""
+    if "flush_saves=0 " not in proc.stdout:
+        raise RuntimeError(
+            f"{case}: expected checkpoint-without-flush (flush_saves=0) "
+            f"but the driver reported otherwise:\n{proc.stdout}")
+
+
 def sweep(boundaries=None, *, rounds: int = 4, ckpt_every: int = 1,
           seed: int = 0, kill_modes=("after", "mid"),
-          workdir: str | None = None, verbose: bool = False) -> dict:
+          workdir: str | None = None, verbose: bool = False,
+          window: int = 2, ckpt_flush: bool = False) -> dict:
     """Kill a pod run at each checkpoint boundary, resume it, and verify
     bit-exact, sanitizer-clean continuation against an uninterrupted
     reference.  Returns the per-case results dict (raises on any
-    divergence)."""
+    divergence).
+
+    ``window`` sets the child's pipeline depth; with the default
+    ``ckpt_flush=False`` the children save via checkpoint-without-flush
+    (the sweep asserts no full-drain save point ever happened), so a
+    window=4 sweep is the acceptance run for deferred handle saves."""
     if boundaries is None:
         boundaries = list(range(ckpt_every, rounds + 1, ckpt_every))
     tmp_ctx = tempfile.TemporaryDirectory() if workdir is None else None
     base = workdir if workdir is not None else tmp_ctx.name
     try:
         ref_dir = os.path.join(base, "reference")
-        code = _run_child(ref_dir, rounds, ckpt_every, seed)
-        if code != 0:
-            raise RuntimeError(f"reference run exited {code}")
+        ref_proc = _run_child(ref_dir, rounds, ckpt_every, seed,
+                              window=window, ckpt_flush=ckpt_flush)
+        if ref_proc.returncode != 0:
+            raise RuntimeError(
+                f"reference run exited {ref_proc.returncode}")
+        if not ckpt_flush:
+            _assert_no_flush(ref_proc, "reference")
         ref = _final_fingerprint(ref_dir, rounds)
         results = {}
         for mode in kill_modes:
@@ -128,16 +156,20 @@ def sweep(boundaries=None, *, rounds: int = 4, ckpt_every: int = 1,
                 case = f"{mode}@{s}"
                 d = os.path.join(base, f"kill_{mode}_{s}")
                 killed = _run_child(d, rounds, ckpt_every, seed,
-                                    kill_step=s, kill_mode=mode)
-                if killed != _SIGKILLED:
+                                    kill_step=s, kill_mode=mode,
+                                    window=window, ckpt_flush=ckpt_flush)
+                if killed.returncode != _SIGKILLED:
                     raise RuntimeError(
-                        f"{case}: child was not SIGKILLed (exit {killed}) "
-                        "— the kill step never fired")
-                resumed = _run_child(d, rounds, ckpt_every, seed)
-                if resumed != 0:
+                        f"{case}: child was not SIGKILLed (exit "
+                        f"{killed.returncode}) — the kill step never fired")
+                resumed = _run_child(d, rounds, ckpt_every, seed,
+                                     window=window, ckpt_flush=ckpt_flush)
+                if resumed.returncode != 0:
                     raise RuntimeError(f"{case}: resumed run exited "
-                                       f"{resumed} (sanitizer violation or "
-                                       "crash)")
+                                       f"{resumed.returncode} (sanitizer "
+                                       "violation or crash)")
+                if not ckpt_flush:
+                    _assert_no_flush(resumed, case)
                 got = _final_fingerprint(d, rounds)
                 if got != ref:
                     raise RuntimeError(
@@ -148,7 +180,8 @@ def sweep(boundaries=None, *, rounds: int = 4, ckpt_every: int = 1,
                     print(f"crash sweep {case}: resumed bit-exact, "
                           "sanitizer-clean")
         return {"rounds": rounds, "boundaries": list(boundaries),
-                "kill_modes": list(kill_modes), "cases": results}
+                "kill_modes": list(kill_modes), "window": window,
+                "ckpt_flush": ckpt_flush, "cases": results}
     finally:
         if tmp_ctx is not None:
             tmp_ctx.cleanup()
@@ -165,6 +198,13 @@ def main() -> None:
     p.add_argument("--kill-step", type=int, default=-1,
                    help="checkpoint step to SIGKILL at (-1: never)")
     p.add_argument("--kill-mode", default="after", choices=("after", "mid"))
+    p.add_argument("--window", type=int, default=2,
+                   help="pipeline window for the child runs (4+ exercises "
+                        "deferred checkpoint-without-flush saves)")
+    p.add_argument("--ckpt-flush", action="store_true", dest="ckpt_flush",
+                   help="children drain the pipeline at every save (the "
+                        "legacy flush saver) instead of the default "
+                        "checkpoint-without-flush")
     p.add_argument("--boundaries", default=None,
                    help="comma-separated kill boundaries (default: every "
                         "checkpoint step)")
@@ -177,7 +217,8 @@ def main() -> None:
     boundaries = [int(x) for x in a.boundaries.split(",")] \
         if a.boundaries else None
     out = sweep(boundaries, rounds=a.rounds, ckpt_every=a.ckpt_every,
-                seed=a.seed, verbose=True)
+                seed=a.seed, verbose=True, window=a.window,
+                ckpt_flush=a.ckpt_flush)
     print(json.dumps(out, indent=2))
 
 

@@ -125,9 +125,15 @@ def _group_streams(cfg: F.FedStepConfig, seed: int = 0):
 
 
 def _make_batch(cfg: F.FedStepConfig, streams, rng: np.random.Generator,
-                plan):
+                plan, put=None):
     """One round's inputs: per-group token shards + the ControlPlane's
-    schedule/weight fields (ring slots, send masks, staleness weights)."""
+    schedule/weight fields (ring slots, send masks, staleness weights).
+
+    ``put`` (the jit step's batch sharding dict) pre-stages the host
+    arrays with one ``jax.device_put`` — the H2D transfers start
+    immediately and overlap the in-flight rounds instead of riding the
+    dispatch.  Values are bit-identical to the lazy ``jnp.asarray``
+    default; only when the copy happens changes."""
     G, H, b, S = cfg.n_groups, cfg.H, cfg.micro_batch, cfg.seq_len
     tokens = np.zeros((G, H, b, S), np.int32)
     labels = np.zeros((G, H, b, S), np.int32)
@@ -139,13 +145,32 @@ def _make_batch(cfg: F.FedStepConfig, streams, rng: np.random.Generator,
                 j = idx[h, i]
                 tokens[g, h, i] = streams[g][j:j + S]
                 labels[g, h, i] = streams[g][j + 1:j + S + 1]
-    batch = {"tokens": jnp.asarray(tokens), "labels": jnp.asarray(labels)}
+    batch = {"tokens": tokens, "labels": labels}
     batch.update(plan.batch_fields())
     arch = cfg.arch
     if arch.frontend_len:
-        batch["frontend"] = jnp.zeros(
-            (G, H, b, arch.frontend_len, arch.d_model), cfg.param_dtype)
-    return batch
+        batch["frontend"] = np.zeros(
+            (G, H, b, arch.frontend_len, arch.d_model),
+            np.dtype(cfg.param_dtype))
+    if put is not None:
+        return jax.device_put(batch, {k: put[k] for k in batch})
+    return {k: jnp.asarray(v) for k, v in batch.items()}
+
+
+def _pipeline_window(args) -> int:
+    """Resolve the pipeline window with explicit validation: an unset
+    attribute (programmatic bare Namespace) defaults to 2; anything set
+    must be an int >= 1 — ``--window 0`` is an error, not a silent remap
+    to the default (``or 2`` used to swallow it)."""
+    w = getattr(args, "window", None)
+    if w is None:
+        return 2
+    w = int(w)
+    if w < 1:
+        raise ValueError(
+            f"--window must be >= 1, got {w}: 1 is the synchronous loop, "
+            ">= 2 keeps that many rounds in flight")
+    return w
 
 
 def run_pod(args) -> dict:
@@ -155,7 +180,7 @@ def run_pod(args) -> dict:
     G = n_groups_of(mesh) * args.groups_per_shard
     # control-plane knobs default for programmatic callers' bare Namespaces
     omega = getattr(args, "omega", None) or 1
-    window = getattr(args, "window", None) or 2
+    window = _pipeline_window(args)
     H = getattr(args, "H", None) or 4
     # tiered-store knobs (pod default: spill disabled — bit-for-bit the
     # hard-ω ring; raise --pool-cap to admit past the ring)
@@ -169,7 +194,7 @@ def run_pod(args) -> dict:
         H=H, lr_d=args.lr_d, lr_s=args.lr_s,
         server_opt=args.server_opt, omega=omega,
         use_kernel=getattr(args, "use_kernel", False))
-    jitted, _, s_spec, _ = F.jit_train_step(cfg, mesh, donate=True)
+    jitted, _, s_spec, b_spec = F.jit_train_step(cfg, mesh, donate=True)
     cplane = ControlPlane(G, omega, cfg.H,
                           policy=getattr(args, "policy", "counter"),
                           max_delay=getattr(args, "max_delay", 16),
@@ -353,7 +378,7 @@ def run_pod(args) -> dict:
         return roster
 
     def batch_fn(r, plan):
-        return _make_batch(cfg, streams, rng, plan)
+        return _make_batch(cfg, streams, rng, plan, put=b_spec)
 
     t0 = time.time()
 
@@ -368,8 +393,13 @@ def run_pod(args) -> dict:
                   f"  {tok_s:,.0f} tok/s")
             t0 = time.time()
 
-    def checkpoint_fn(r, ckpt_state):
-        host_state = jax.tree.map(np.asarray, ckpt_state)
+    def capture_fn(r):
+        """Dispatch-time host bookkeeping for round r's checkpoint —
+        snapshotted at the SAME boundary as the handle's arrays, so the
+        eventual (possibly deferred) save describes exactly round r.
+        The extras dicts are built fresh here and the payload pytrees
+        they reference are never mutated in place (retention release
+        pops; store fill pops), so a later save sees round-r values."""
         # v3 extras layout: retention params and spilled ring slots ride
         # the same atomic snapshot under their own namespaces
         extras = {}
@@ -386,8 +416,17 @@ def run_pod(args) -> dict:
                     "profiles": profiles.summary()}
         if sel is not None and hasattr(sel, "_rng"):
             metadata["selection_rng"] = sel._rng.bit_generator.state
-        store.save(args.ckpt_dir, r + 1, host_state, metadata=metadata,
-                   extras=extras or None)
+        return {"metadata": metadata, "extras": extras or None}
+
+    def checkpoint_fn(r, handle):
+        """Save round r from its RoundHandle: donation-safe host copies
+        of the captured arrays + the dispatch-time metadata.  In the
+        no-flush path this runs while rounds r+1..r+window are still in
+        flight; in the flush path the handle wraps the drained live
+        state — the save itself is identical."""
+        meta = handle.meta
+        store.save(args.ckpt_dir, r + 1, handle.host_tree(),
+                   metadata=meta["metadata"], extras=meta["extras"])
         if injector is not None:
             injector.on_checkpoint(r, args.ckpt_dir, r + 1)
 
@@ -396,7 +435,9 @@ def run_pod(args) -> dict:
             state, start_round, args.rounds,
             active_fn=active_fn, batch_fn=batch_fn, on_metrics=on_metrics,
             checkpoint_every=args.ckpt_every if args.ckpt_dir else 0,
-            checkpoint_fn=checkpoint_fn if args.ckpt_dir else None)
+            checkpoint_fn=checkpoint_fn if args.ckpt_dir else None,
+            capture_fn=capture_fn if args.ckpt_dir else None,
+            checkpoint_flush=bool(getattr(args, "ckpt_flush", False)))
     except InjectedCrash as crash:
         # persist the fired boundary FIRST, then die: the restarted run
         # resumes from the newest verified snapshot and must not re-fire
@@ -406,6 +447,10 @@ def run_pod(args) -> dict:
         print(f"faults: {crash} (fired boundaries "
               f"{sorted(injector.fired_crashes)}) — restart to resume")
         raise
+    xs = executor.summary()
+    print(f"checkpoints: flush_saves={xs['checkpoints']['flush_saves']} "
+          f"noflush_saves={xs['checkpoints']['noflush_saves']}  "
+          f"handle_bytes_peak={xs['handle_bytes_peak']}")
     mem = {**cplane.memory_summary(), **act_store.summary()}
     print(f"memory: spills {mem['spills']}  fills {mem['fills']}  "
           f"evictions {mem['evictions']}  peak pool "
@@ -424,7 +469,7 @@ def run_pod(args) -> dict:
               f"roster events={absences}  "
               f"selection={sel.describe() if sel else 'all'}")
     out = {"history": history, "final": history[-1] if history else None,
-           "executor": executor.summary(), "memory": mem,
+           "executor": xs, "memory": mem,
            "consumed": consumed.tolist(), "contribution_balance": bal}
     if injector is not None:
         fr = injector.report()
@@ -626,6 +671,12 @@ def main() -> None:
                         "the offending event window")
     p.add_argument("--ckpt-dir", default=None)
     p.add_argument("--ckpt-every", type=int, default=5)
+    p.add_argument("--ckpt-flush", action="store_true", dest="ckpt_flush",
+                   help="drain the pipeline at every checkpoint boundary "
+                        "(the pre-handle saver) instead of the default "
+                        "checkpoint-without-flush, which saves round r "
+                        "from its dispatch-time handle while rounds "
+                        "r+1..r+window stay in flight")
     p.add_argument("--log-every", type=int, default=1)
     p.add_argument("--devices", type=int, default=8)
     p.add_argument("--duration", type=float, default=300.0)

@@ -86,12 +86,16 @@ class ActivationStore:
         self.pool_cap = pool_cap
         self.quant = quant
         self._pool: dict[int, dict] = {}   # key -> {"payload", "quant",
-                                           #         "dtypes"}
+                                           #         "dtypes", "staged"?}
         self.n_spills = 0
         self.n_fills = 0
         self.pool_bytes = 0
         self.peak_pool_bytes = 0
         self.peak_entries = 0
+        self.n_prefetched = 0
+        self.prefetch_hits = 0
+        self.staged_bytes = 0
+        self.peak_staged_bytes = 0
 
     def __len__(self) -> int:
         return len(self._pool)
@@ -129,14 +133,38 @@ class ActivationStore:
                       entries=len(self._pool))
 
     def fill(self, key: int) -> dict:
-        """Pop one entry, dequantized, ready to scatter back on-mesh."""
+        """Pop one entry, dequantized, ready to scatter back on-mesh.
+        A prefetch-staged entry returns its staged decode (bit-identical
+        to decoding now: ``_decode`` is pure in the stored payload)."""
         e = self._pool.pop(int(key))
         self.n_fills += 1
         self.pool_bytes -= _nbytes(e["payload"])
+        staged = e.get("staged")
+        if staged is not None:
+            self.prefetch_hits += 1
+            self.staged_bytes -= _nbytes(staged)
         if _san.TRACING:
             _san.emit("store.fill", store=self, key=int(key),
                       entries=len(self._pool))
-        return _decode(e["payload"], e["dtypes"])
+        return staged if staged is not None \
+            else _decode(e["payload"], e["dtypes"])
+
+    def prefetch(self, key: int) -> None:
+        """Pre-decode one pooled entry into a staged host payload (the
+        plan's lookahead hint): the eventual :meth:`fill` returns the
+        staged decode instead of dequantizing on the critical boundary.
+        Advisory and idempotent — unknown keys and payload-less entries
+        (post-restore, pre-load_arrays) are ignored; staging never
+        changes what ``fill`` returns, only when the decode work runs."""
+        e = self._pool.get(int(key))
+        if e is None or e.get("payload") is None or \
+                e.get("staged") is not None:
+            return
+        e["staged"] = _decode(e["payload"], e["dtypes"])
+        self.n_prefetched += 1
+        self.staged_bytes += _nbytes(e["staged"])
+        self.peak_staged_bytes = max(self.peak_staged_bytes,
+                                     self.staged_bytes)
 
     # ------------------------------------------------------------------
     # checkpoint riding (RetentionStore protocol)
@@ -213,4 +241,7 @@ class ActivationStore:
                 "peak_pool_entries": self.peak_entries,
                 "pool_bytes": int(self.pool_bytes),
                 "peak_pool_bytes": int(self.peak_pool_bytes),
-                "store_spills": self.n_spills, "store_fills": self.n_fills}
+                "store_spills": self.n_spills, "store_fills": self.n_fills,
+                "n_prefetched": self.n_prefetched,
+                "prefetch_hits": self.prefetch_hits,
+                "peak_staged_bytes": int(self.peak_staged_bytes)}

@@ -297,3 +297,37 @@ def test_staleness_cap_rejects_then_readmits():
     # after the rejected round the group restarts fresh (Alg. 4 line 20)
     np.testing.assert_allclose(cp.agg_weights(np.array([True, True])),
                                [1.0, 1.0])
+
+
+def test_prefetch_lookahead_is_plan_neutral():
+    """Two identically-seeded planes, one planning with lookahead=0 and
+    one with lookahead=4, must emit bit-identical plans forever — the
+    ``prefetch`` field stages decodes, it never changes a decision."""
+    def occupied(pool=3):
+        cp = ControlPlane(4, 2, 2, pool_cap=pool)
+        for _ in range(2 + pool):          # stall reads -> occupy the pool
+            cp.plan_round(reads=np.zeros(2, bool))
+            cp.finish_round()
+        assert cp.pool_live == pool
+        return cp
+
+    a, b = occupied(), occupied()
+    quiet = np.zeros((2, 4), bool)
+    for r in range(8):
+        reads = np.ones(2, bool) if r % 2 else np.zeros(2, bool)
+        pa = a.plan_round(produce=quiet, reads=reads, lookahead=0)
+        pb = b.plan_round(produce=quiet, reads=reads, lookahead=4)
+        np.testing.assert_array_equal(pa.read_slot, pb.read_slot)
+        np.testing.assert_array_equal(pa.send_mask, pb.send_mask)
+        np.testing.assert_array_equal(pa.write_slot, pb.write_slot)
+        np.testing.assert_array_equal(pa.agg_weight, pb.agg_weight)
+        assert pa.fill == pb.fill and pa.spill == pb.spill
+        assert pa.retire == pb.retire and pa.restore == pb.restore
+        # the hint itself: no lookahead -> empty; lookahead -> a ranked
+        # subset of the post-round pool, capped at the horizon
+        assert pa.prefetch == ()
+        assert len(pb.prefetch) <= 4
+        assert set(pb.prefetch) <= set(b.pool_occupancy)
+        a.finish_round()
+        b.finish_round()
+    assert a.n_fills == b.n_fills > 0

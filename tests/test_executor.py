@@ -414,3 +414,204 @@ def test_churn_without_retention_wiring_raises():
     with pytest.raises(RuntimeError, match="gather"):
         ex.run(0, 0, 2, active_fn=lambda r: rosters[r],
                batch_fn=lambda r, plan: {})
+
+
+# ---------------------------------------------------------------------------
+# deep pipeline (window >= 4) with DONATION: per-round handles keep
+# retention/spill/checkpoint consumers off the invalidated live state
+# ---------------------------------------------------------------------------
+
+_DONATED = {}
+
+
+def _donated_setup(omega=2, n_groups=2, H=2):
+    """jit'd hybrid step with donate_argnums=(0,) — the deep-window
+    acceptance configuration (cached: one compile per config)."""
+    key = (omega, n_groups, H)
+    if key not in _DONATED:
+        a = registry.smoke_config("smollm-135m")
+        cfg = F.FedStepConfig(arch=a, l_split=1, n_groups=n_groups,
+                              seq_len=16, per_group_batch=2 * H, H=H,
+                              omega=omega)
+        mesh = make_debug_mesh(1, 1)
+        jitted, _, s_spec, _ = F.jit_train_step(cfg, mesh, donate=True)
+        init = jax.jit(lambda: F.init_train_state(jax.random.PRNGKey(0),
+                                                  cfg),
+                       out_shardings=s_spec)
+        _DONATED[key] = (cfg, jitted, s_spec, init)
+    return _DONATED[key]
+
+
+class _StallThenDrain(StragglerProfiles):
+    """Deterministic produce/reads: every group emits and the server never
+    reads for ``stall_rounds`` plans (backlog -> spills), then emission
+    stops and the server drains (fills).  Pure function of the plan call
+    count, so identical for every window."""
+
+    def __init__(self, n_groups, stall_rounds):
+        super().__init__(n_groups)
+        self.stall_rounds = stall_rounds
+        self._planned = 0
+
+    def produce(self, H):
+        self._planned += 1
+        return np.full((H, self.G), self._planned <= self.stall_rounds,
+                       bool)
+
+    def reads(self, H):
+        return np.full(H, self._planned > self.stall_rounds, bool)
+
+
+def _run_donated(window, actives, *, pool_cap=0, stall_rounds=0,
+                 faults=None, ckpt=None):
+    """One donated-step executor run; returns (history, final host state,
+    executor).  ``ckpt`` = (every, flush, saves_dict) wires the
+    checkpoint path with capture_fn metadata."""
+    from repro.faults import PodFaultInjector, UpdateGate
+    from repro.memory import ActivationStore
+
+    cfg, step, s_spec, init = _donated_setup()
+    cp = ControlPlane(cfg.n_groups, cfg.omega, cfg.H, pool_cap=pool_cap)
+    kw = {}
+    if pool_cap:
+        kw = dict(store=ActivationStore(pool_cap),
+                  gather_slot=F.gather_act_slot,
+                  scatter_slot=lambda st, s, p: F.scatter_act_slot(
+                      st, s, p, state_shardings=s_spec))
+    if faults is not None:
+        kw["faults"] = PodFaultInjector(faults, gate=UpdateGate())
+    profiles = _StallThenDrain(cfg.n_groups, stall_rounds) \
+        if stall_rounds else StragglerProfiles(cfg.n_groups)
+    ex = RoundExecutor(
+        step, cp, window=window, profiles=profiles,
+        gather=F.gather_group_state,
+        scatter=lambda st, g, p: F.scatter_group_state(
+            st, g, p, state_shardings=s_spec), **kw)
+    run_kw = {}
+    if ckpt is not None:
+        every, flush, saves = ckpt
+
+        def checkpoint_fn(r, handle):
+            saves[r] = {"tree": jax.tree.map(np.array, handle.host_tree()),
+                        "meta": handle.meta,
+                        "in_flight": len(ex._pending)}
+        run_kw = dict(checkpoint_every=every, checkpoint_fn=checkpoint_fn,
+                      capture_fn=lambda r: {"round": r},
+                      checkpoint_flush=flush)
+    state, hist = ex.run(init(), 0, len(actives),
+                         active_fn=lambda r: actives[r],
+                         batch_fn=_batch_fn(cfg), **run_kw)
+    return hist, jax.tree.map(np.asarray, state), ex
+
+
+def test_window4_donated_bitidentical_under_churn_spill_and_faults():
+    """Acceptance: window=4 with donation ON, under churn (drop/rejoin
+    retention through the handle ring), a spilling/filling tiered store,
+    and dense injected faults, produces metrics and a final state
+    bit-identical to window=1 — and the run is sanitizer-clean."""
+    from repro.analysis.sanitize import sanitized
+    from repro.faults import FaultEvent, FaultSchedule
+
+    actives = [np.ones(2, bool)] * 3 + \
+        [np.array([True, False])] * 2 + [np.ones(2, bool)] * 5
+    sched = FaultSchedule(horizon=10.0, events=(
+        FaultEvent(6.0, "timeout", device=0, param=1.0),
+        FaultEvent(8.0, "corrupt_act", device=1, kind="inf")))
+    results = {}
+    for window in (1, 4):
+        with sanitized() as san:
+            results[window] = _run_donated(
+                window, actives, pool_cap=2, stall_rounds=4,
+                faults=FaultSchedule(horizon=sched.horizon,
+                                     events=sched.events))
+        assert san.n_violations == 0, san.violations
+    h1, s1, ex1 = results[1]
+    h4, s4, ex4 = results[4]
+    assert h1 == h4                        # exact float equality
+    for la, lb in zip(jax.tree.leaves(s1), jax.tree.leaves(s4)):
+        np.testing.assert_array_equal(la, lb)
+    # the scenario genuinely exercised every donated-handle consumer
+    assert ex4.cplane.n_spills > 0
+    assert ex4.summary()["faults"]["matched"] is True
+    assert ex4.peak_in_flight == 4 and ex1.peak_in_flight == 1
+    assert ex4.handles.n_captured > 0 and ex4.handle_bytes_peak > 0
+
+
+def test_checkpoint_without_flush_bitexact_with_flush_saver():
+    """Acceptance: checkpoint-without-flush (deferred handle saves, pipe
+    kept full) writes byte-identical snapshots to the legacy flush saver
+    at every boundary, never drains, and does not perturb training."""
+    actives = [np.ones(2, bool)] * 8
+    saves_f, saves_n = {}, {}
+    hf, sf, exf = _run_donated(4, actives, ckpt=(2, True, saves_f))
+    hn, sn, exn = _run_donated(4, actives, ckpt=(2, False, saves_n))
+    assert hf == hn
+    for la, lb in zip(jax.tree.leaves(sf), jax.tree.leaves(sn)):
+        np.testing.assert_array_equal(la, lb)
+    # same boundaries, same dispatch-time metadata, bit-identical arrays
+    assert sorted(saves_f) == sorted(saves_n) == [1, 3, 5, 7]
+    for r in saves_f:
+        assert saves_f[r]["meta"] == saves_n[r]["meta"] == {"round": r}
+        for la, lb in zip(jax.tree.leaves(saves_f[r]["tree"]),
+                          jax.tree.leaves(saves_n[r]["tree"])):
+            np.testing.assert_array_equal(la, lb)
+    # the flush leg drained for every save; the no-flush leg never did
+    assert exf.n_ckpt_flush == 4 and exf.n_ckpt_noflush == 0
+    assert exn.n_ckpt_flush == 0 and exn.n_ckpt_noflush == 4
+    assert all(s["in_flight"] == 0 for s in saves_f.values())
+    assert any(s["in_flight"] > 0 for s in saves_n.values())
+    s = exn.summary()["checkpoints"]
+    assert s == {"flush_saves": 0, "noflush_saves": 4}
+
+
+def test_legacy_checkpoint_contract_without_capture_fn():
+    """capture_fn=None keeps the old contract: a full drain and
+    checkpoint_fn(r, state) with the LIVE state object, not a handle."""
+    cp = ControlPlane(2, 1, 2)
+    ex = RoundExecutor(lambda s, b: (s, {"d_loss": 0.0}), cp, window=2)
+    seen = []
+    ex.run({"x": np.zeros(2)}, 0, 4,
+           active_fn=lambda r: np.ones(2, bool),
+           batch_fn=lambda r, plan: {},
+           checkpoint_every=2, checkpoint_fn=lambda r, st: seen.append(st))
+    assert [isinstance(s, dict) for s in seen] == [True, True]
+    assert ex.n_ckpt_flush == 2 and ex.n_ckpt_noflush == 0
+
+
+def test_summary_reports_steady_state_exposure_excluding_warmup():
+    """The first ``window`` dispatches have nothing in flight to hide
+    behind; summary() excludes them from the steady-state exposure."""
+    cp = ControlPlane(2, 1, 2)
+    ex = RoundExecutor(lambda s, b: (s, {"d_loss": 0.0}), cp, window=3)
+    ex.run(0, 0, 7, active_fn=lambda r: np.ones(2, bool),
+           batch_fn=lambda r, plan: {})
+    s = ex.summary()
+    assert s["warmup_rounds_excluded"] == 3
+    assert s["rounds"] == 7
+    assert 0.0 <= s["host_s_exposed_steady"] <= s["host_s_exposed"] + 1e-9
+    assert 0.0 <= s["hidden_host_frac_steady"] <= 1.0
+    assert s["handles"]["depth"] == 4
+    # fewer rounds than the window: everything is warmup
+    ex2 = RoundExecutor(lambda s, b: (s, {"d_loss": 0.0}),
+                        ControlPlane(2, 1, 2), window=4)
+    ex2.run(0, 0, 2, active_fn=lambda r: np.ones(2, bool),
+            batch_fn=lambda r, plan: {})
+    s2 = ex2.summary()
+    assert s2["warmup_rounds_excluded"] == 2
+    assert s2["host_s_exposed_steady"] == 0.0
+
+
+def test_pipeline_window_validation():
+    """--window 0 is a typed error, not a silent remap to the default
+    (the old ``or 2`` idiom swallowed it); unset still defaults to 2."""
+    import argparse
+
+    from repro.launch.train import _pipeline_window
+
+    assert _pipeline_window(argparse.Namespace()) == 2
+    assert _pipeline_window(argparse.Namespace(window=None)) == 2
+    assert _pipeline_window(argparse.Namespace(window=1)) == 1
+    assert _pipeline_window(argparse.Namespace(window=4)) == 4
+    for bad in (0, -3):
+        with pytest.raises(ValueError, match="window must be >= 1"):
+            _pipeline_window(argparse.Namespace(window=bad))

@@ -377,3 +377,16 @@ def test_crash_sweep_sigkill_bit_exact_smoke():
     out = sweep(boundaries=[1], rounds=2, ckpt_every=1,
                 kill_modes=("after", "mid"))
     assert out["cases"] == {"after@1": "bit-exact", "mid@1": "bit-exact"}
+
+
+@pytest.mark.slow
+def test_crash_sweep_window4_checkpoint_without_flush():
+    """Acceptance for the deep pipeline: SIGKILL sweep at window=4 with
+    checkpoint-without-flush — children save from dispatch-time handles
+    while rounds stay in flight (the sweep asserts flush_saves=0 on the
+    reference and every resumed run), and resume is still bit-exact."""
+    from repro.faults.crash_harness import sweep
+    out = sweep(boundaries=[1], rounds=2, ckpt_every=1,
+                kill_modes=("after", "mid"), window=4)
+    assert out["window"] == 4 and out["ckpt_flush"] is False
+    assert out["cases"] == {"after@1": "bit-exact", "mid@1": "bit-exact"}

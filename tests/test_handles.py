@@ -1,0 +1,116 @@
+"""Donation-safe round handles: snapshot independence from the donated
+source, lazy slicing, readiness/host staging, and HandleRing eviction +
+byte accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.handles import HandleRing, RoundHandle, snapshot_tree
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"dev": {"w": jnp.asarray(rng.standard_normal((2, 3)),
+                                     jnp.float32)},
+            "aux": {"b": jnp.arange(4, dtype=jnp.float32)},
+            "act_buf": {"acts": jnp.asarray(
+                rng.standard_normal((2, 5)), jnp.float32)},
+            "host": np.arange(6.0),
+            "step": 7}
+
+
+# ---------------------------------------------------------------------------
+# snapshot_tree: fresh buffers, not views of the donated source
+# ---------------------------------------------------------------------------
+
+def test_snapshot_survives_donation_of_the_source():
+    """The whole point: a donated step invalidates the source buffers, and
+    the snapshot taken before the donating dispatch must stay readable."""
+    donating = jax.jit(lambda x: x + 1.0, donate_argnums=(0,))
+    src = jnp.arange(8, dtype=jnp.float32)
+    snap = snapshot_tree({"x": src})
+    donating(src)                       # src's buffer is now donated
+    with pytest.raises(Exception):
+        np.asarray(src)                 # the source really is dead
+    np.testing.assert_array_equal(np.asarray(snap["x"]),
+                                  np.arange(8, dtype=np.float32))
+
+
+def test_snapshot_copies_numpy_leaves_and_passes_scalars():
+    host = np.arange(3.0)
+    snap = snapshot_tree({"h": host, "s": 5})
+    host[0] = 99.0                      # mutate AFTER the snapshot
+    np.testing.assert_array_equal(snap["h"], [0.0, 1.0, 2.0])
+    assert snap["s"] == 5
+
+
+def test_snapshot_to_host_keeps_values_bitexact():
+    t = _tree()
+    a = snapshot_tree(t)
+    b = snapshot_tree(t, to_host=True)  # async D2H staged, values identical
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+# ---------------------------------------------------------------------------
+# RoundHandle: capture subsets, slicing, readiness, host caching
+# ---------------------------------------------------------------------------
+
+def test_capture_keys_subset_and_has():
+    h = RoundHandle.capture(3, _tree(), keys=("dev", "aux"))
+    assert h.round == 3
+    assert h.has("dev") and h.has("aux")
+    assert not h.has("act_buf") and not h.has("host")
+
+
+def test_group_state_and_act_slot_match_live_slices():
+    t = _tree(seed=4)
+    h = RoundHandle.capture(0, t, keys=("dev", "aux", "act_buf"))
+    g, s = 1, 0
+    got = h.group_state(g)
+    np.testing.assert_array_equal(got["dev"]["w"],
+                                  np.asarray(t["dev"]["w"])[g])
+    np.testing.assert_array_equal(got["aux"]["b"],
+                                  np.asarray(t["aux"]["b"])[g])
+    np.testing.assert_array_equal(h.act_slot(s)["acts"],
+                                  np.asarray(t["act_buf"]["acts"])[s])
+
+
+def test_ready_and_host_tree_cached():
+    h = RoundHandle.capture(0, _tree(), to_host=True, meta={"r": 0})
+    jax.block_until_ready(h.tree)
+    assert h.ready()
+    ht = h.host_tree()
+    assert h.host_tree() is ht          # cached
+    assert isinstance(ht["dev"]["w"], np.ndarray)
+    assert h.meta == {"r": 0}
+    assert h.nbytes > 0
+
+
+def test_capture_copy_false_wraps_live_tree():
+    t = _tree()
+    h = RoundHandle.capture(2, t, copy=False)
+    assert h.tree is t                  # the flush path: no copies
+
+
+# ---------------------------------------------------------------------------
+# HandleRing: positional eviction + byte high-water mark
+# ---------------------------------------------------------------------------
+
+def test_ring_evicts_oldest_and_tracks_peak_bytes():
+    ring = HandleRing(depth=2)
+    for r in range(4):
+        ring.push(RoundHandle.capture(r, {"x": np.zeros(8, np.float32)}))
+    assert len(ring) == 2
+    assert ring.get(0) is None and ring.get(1) is None
+    assert ring.get(2).round == 2 and ring.get(3).round == 3
+    s = ring.summary()
+    assert s["held"] == 2 and s["captured"] == 4
+    assert s["peak_bytes"] == s["bytes"] == 2 * 32
+    assert ring.nbytes == 64
+
+
+def test_ring_rejects_bad_depth():
+    with pytest.raises(ValueError, match="depth"):
+        HandleRing(depth=0)

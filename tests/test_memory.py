@@ -276,6 +276,73 @@ def test_executor_refuses_spills_without_store_wiring():
 
 
 # ---------------------------------------------------------------------------
+# prefetch-ahead staging: pre-decoded fills, bit-identical and advisory
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("quant", [False, True])
+def test_prefetch_staged_fill_is_bitexact(quant):
+    """A prefetch-staged fill returns exactly what an unstaged fill
+    would (the decode is pure in the stored payload) — including through
+    the int8 quantized path — and the staging counters balance."""
+    rng = np.random.default_rng(3)
+    payloads = {k: _payload(rng, 8, 1.0) for k in (0, 1)}
+    a = ActivationStore(2, quant=quant)     # staged leg
+    b = ActivationStore(2, quant=quant)     # plain leg
+    for k, p in payloads.items():
+        a.spill(k, p)
+        b.spill(k, p)
+    a.prefetch(0)
+    assert a.n_prefetched == 1 and a.staged_bytes > 0
+    a.prefetch(0)                           # idempotent: already staged
+    assert a.n_prefetched == 1
+    a.prefetch(99)                          # advisory: unknown key ignored
+    assert a.n_prefetched == 1
+    for k in (0, 1):
+        fa, fb = a.fill(k), b.fill(k)
+        for leaf in fa:
+            np.testing.assert_array_equal(fa[leaf], fb[leaf])
+    assert a.prefetch_hits == 1 and a.staged_bytes == 0
+    assert a.peak_staged_bytes > 0
+    s = a.summary()
+    assert s["n_prefetched"] == 1 and s["prefetch_hits"] == 1
+
+
+def test_prefetch_ignores_payloadless_restored_entries():
+    """Post-restore, pre-load_arrays entries hold metadata only; a
+    prefetch hint against them must be a no-op, not a crash."""
+    src = ActivationStore(1)
+    src.spill(0, _payload(np.random.default_rng(0), 4, 1.0))
+    dst = ActivationStore(1)
+    dst.load_meta(src.meta_dict())          # keys known, payloads absent
+    dst.prefetch(0)
+    assert dst.n_prefetched == 0 and dst.staged_bytes == 0
+
+
+def test_executor_prefetch_stages_ahead_without_changing_values():
+    """The executor's lookahead (= window) pre-stages pooled entries and
+    the fills consume the staged decodes; the metric history is
+    bit-identical across windows (prefetch is plan-neutral)."""
+    hists = {}
+    for window in (1, 2):
+        cp = ControlPlane(G4, OMEGA, 2, pool_cap=3 * OMEGA)
+        store = ActivationStore(3 * OMEGA)
+        gather, scatter = _slot_ops()
+        ex = RoundExecutor(_StubMesh(OMEGA).step, cp, window=window,
+                           profiles=_StalledProfiles(G4, stall_rounds=5),
+                           store=store, gather_slot=gather,
+                           scatter_slot=scatter)
+        state = {"ring": [{"acts": np.zeros(4, np.float32)}] * OMEGA}
+        _, hists[window] = ex.run(
+            state, 0, 14, active_fn=lambda r: np.ones(G4, bool),
+            batch_fn=lambda r, plan: plan)
+        mem = ex.summary()["memory"]
+        assert mem["n_prefetched"] > 0
+        assert mem["prefetch_hits"] > 0
+        assert mem["fills"] == mem["spills"] > 0
+    assert hists[1] == hists[2]
+
+
+# ---------------------------------------------------------------------------
 # checkpoint riding: state_dict v3 + extras, v2 compatibility
 # ---------------------------------------------------------------------------
 
