@@ -2,56 +2,74 @@
 
 FedOptima runs through the integrated ControlPlane (scheduler + flow
 control + staleness accounting); the ω-cap (Eq. 3) is asserted on every
-enqueue during the run and on the recorded peak afterwards.
+enqueue during the run and on the recorded peak afterwards.  Every
+protocol runs with a sim-domain span tracer attached, and the recorded
+timelines feed :func:`repro.obs.idle.attribute_idle` — the idle fraction
+each method reports is decomposed into *task-dependency* idle (blocked
+on the other side of the split), *straggler* idle (waiting on slower
+peers), warmup (pipeline fill) and offline time, per protocol.
 
 Also measures RoundExecutor overlap (the HOST-side dependency idle time
 the pipelined driver hides): window=1 (synchronous) vs window=2 (double-
 buffered) wall per round on a testbed-modeled workload, plus the hidden
 host-plan milliseconds and peak rounds in flight.  Results — including
-the window deltas — are written to ``BENCH_idle.json``.
+the window deltas and the per-protocol ``idle_attribution`` tables —
+are written to ``BENCH_idle.json``.
 """
 from __future__ import annotations
 
 import os
 
-from repro.core.baselines import REGISTRY
 from repro.core.simulation import simulate_fedoptima
+from repro.obs.idle import attribute_idle
+from repro.obs.metrics import MetricsRegistry
 
 from . import common
 from .common import (MOBILENET_SPLIT, OMEGA, Row, TRANSFORMER6_SPLIT,
                      VGG5_SPLIT, bench_duration, executor_overlap,
-                     fedoptima_control, testbed_a, testbed_b, timed,
+                     run_protocol_grid, testbed_a, testbed_b, timed,
                      write_record)
 
 OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_idle.json")
 
 
-def run(model, cluster, tag, record):
+def run(model, cluster, tag, record, registry):
     dur = bench_duration(600.0)
     rows = []
-    cp = fedoptima_control(cluster)
-    m, us = timed(simulate_fedoptima, model, cluster, duration=dur,
-                  omega=OMEGA, control=cp)
+    results, _, cp = run_protocol_grid(model, cluster, duration=dur,
+                                       registry=registry, trace=True)
     assert cp.peak_buffered <= OMEGA, (cp.peak_buffered, OMEGA)
-    rows.append(Row(f"idle/{tag}/fedoptima", us,
-                    f"srv_idle={m.srv_idle_frac:.3f};dev_idle={m.dev_idle_frac:.3f}"
-                    f";peak_buf={cp.peak_buffered}"))
-    best_srv, best_dev = m.srv_idle_frac, m.dev_idle_frac
+    attribution = {}
     base_srv, base_dev = [], []
-    for name, fn in REGISTRY.items():
-        b, us = timed(fn, model, cluster, duration=dur)
-        rows.append(Row(f"idle/{tag}/{name}", us,
-                        f"srv_idle={b.srv_idle_frac:.3f};dev_idle={b.dev_idle_frac:.3f}"))
-        base_srv.append(b.srv_idle_frac)
-        base_dev.append(b.dev_idle_frac)
-    red_srv = 1.0 - best_srv / max(min(base_srv), 1e-9)
-    red_dev = 1.0 - best_dev / max(min(base_dev), 1e-9)
+    for name, r in results.items():
+        m, us = r["metrics"], r["us"]
+        attr = attribute_idle(r["tracer"], duration=dur)
+        attribution[name] = {"server": attr["server"],
+                             "devices": attr["devices"],
+                             "warmup_end_s": attr["warmup_end_s"],
+                             "steady": m.steady_summary()}
+        srv_dep = attr["server"]["task_dependency_frac"]
+        srv_str = attr["server"]["straggler_frac"]
+        extra = f";peak_buf={cp.peak_buffered}" if name == "fedoptima" \
+            else ""
+        rows.append(Row(
+            f"idle/{tag}/{name}", us,
+            f"srv_idle={m.srv_idle_frac:.3f};dev_idle="
+            f"{m.dev_idle_frac:.3f};srv_dep={srv_dep:.3f};"
+            f"srv_straggler={srv_str:.3f}{extra}"))
+        if name != "fedoptima":
+            base_srv.append(m.srv_idle_frac)
+            base_dev.append(m.dev_idle_frac)
+    fo = results["fedoptima"]["metrics"]
+    red_srv = 1.0 - fo.srv_idle_frac / max(min(base_srv), 1e-9)
+    red_dev = 1.0 - fo.dev_idle_frac / max(min(base_dev), 1e-9)
     rows.append(Row(f"idle/{tag}/reduction_vs_best_baseline", 0.0,
                     f"server={red_srv:.1%};device={red_dev:.1%}"))
-    record[tag] = {"fedoptima_srv_idle": m.srv_idle_frac,
-                   "fedoptima_dev_idle": m.dev_idle_frac,
+    record[tag] = {"fedoptima_srv_idle": fo.srv_idle_frac,
+                   "fedoptima_dev_idle": fo.dev_idle_frac,
                    "reduction_srv": red_srv, "reduction_dev": red_dev,
-                   "profiles": m.profiles.summary()}
+                   "profiles": fo.profiles.summary(),
+                   "idle_attribution": attribution}
     return rows
 
 
@@ -131,15 +149,54 @@ def run_sanitizer_overhead(model, cluster, tag, record):
     return rows
 
 
+def run_tracer_overhead(model, cluster, tag, record):
+    """Measured cost of ``--trace``: the same seeded churn scenario with
+    and without a span tracer attached.  The tracer only records — the
+    two runs must produce identical metrics (asserted), and the measured
+    wall ratio pins the overhead (target: <= 1.5x)."""
+    from repro.fleet.traces import diurnal_trace
+    from repro.obs.trace import Tracer, traced
+
+    dur = bench_duration(600.0)
+    trace = diurnal_trace(cluster.K, horizon=dur, interval=dur / 24.0,
+                          day=dur / 2.0, on_frac=0.6, bw=cluster.dev_bw,
+                          bw_jitter=0.3, seed=7)
+    kw = dict(duration=dur, omega=OMEGA, fleet=trace, seed=11)
+    m_plain, us_plain = timed(simulate_fedoptima, model, cluster, **kw)
+    tr = Tracer(domain="sim")
+    with traced(tr):
+        m_tr, us_tr = timed(simulate_fedoptima, model, cluster, **kw)
+    same = (m_plain.srv_idle_frac == m_tr.srv_idle_frac
+            and m_plain.dev_idle_frac == m_tr.dev_idle_frac
+            and m_plain.throughput == m_tr.throughput)
+    if not same:
+        raise RuntimeError(
+            "tracer perturbed the run: traced metrics differ from the "
+            f"plain leg ({m_plain.throughput} vs {m_tr.throughput})")
+    overhead = us_tr / max(us_plain, 1e-9)
+    rows = [Row(f"idle/{tag}/tracer_overhead", us_tr,
+                f"plain_us={us_plain:.1f};overhead_x={overhead:.3f};"
+                f"spans={len(tr.spans)};lanes={len(tr.lanes())}")]
+    record[f"{tag}_tracer"] = {
+        "us_plain": us_plain, "us_traced": us_tr,
+        "overhead_x": overhead, "target_max_x": 1.5,
+        "spans": len(tr.spans), "lanes": len(tr.lanes()),
+        "metrics_equal": same}
+    return rows
+
+
 def main() -> list[Row]:
     record: dict = {"smoke": common.SMOKE, "duration_s": bench_duration(600.0)}
+    registry = MetricsRegistry()
     rows = []
-    rows += run(VGG5_SPLIT, testbed_a(), "A_vgg5", record)
-    rows += run(MOBILENET_SPLIT, testbed_b(), "B_mobilenet", record)
-    rows += run(TRANSFORMER6_SPLIT, testbed_a(), "A_transformer6", record)
+    rows += run(VGG5_SPLIT, testbed_a(), "A_vgg5", record, registry)
+    rows += run(MOBILENET_SPLIT, testbed_b(), "B_mobilenet", record, registry)
+    rows += run(TRANSFORMER6_SPLIT, testbed_a(), "A_transformer6", record,
+                registry)
     rows += run_executor_overlap(VGG5_SPLIT, testbed_a(), "A_vgg5", record)
     rows += run_sanitizer_overhead(VGG5_SPLIT, testbed_a(), "A_vgg5", record)
-    write_record(OUT_PATH, record)
+    rows += run_tracer_overhead(VGG5_SPLIT, testbed_a(), "A_vgg5", record)
+    write_record(OUT_PATH, record, registry=registry)
     rows.append(Row("idle/json", 0.0, f"wrote={os.path.basename(OUT_PATH)}"))
     return rows
 

@@ -18,14 +18,13 @@ from __future__ import annotations
 
 import os
 
-from repro.core.baselines import REGISTRY
-from repro.core.simulation import simulate_fedoptima
+from repro.obs.metrics import MetricsRegistry
 
 from . import common
 from .common import (MOBILENET_SPLIT, OMEGA, Row, TRANSFORMER12_SPLIT,
                      TRANSFORMER6_SPLIT, VGG5_SPLIT, bench_duration,
-                     executor_overlap, fedoptima_control, testbed_a,
-                     testbed_b, timed, write_record)
+                     executor_overlap, run_protocol_grid, testbed_a,
+                     testbed_b, write_record)
 
 #: The executor sweep's pipeline depths.
 WINDOWS = (1, 2, 4, 8)
@@ -34,25 +33,28 @@ OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
                         "BENCH_throughput.json")
 
 
-def run(model, cluster, tag, record):
+def run(model, cluster, tag, record, registry):
     dur = bench_duration(600.0)
     rows = []
-    cp = fedoptima_control(cluster)
-    fo, us = timed(simulate_fedoptima, model, cluster, duration=dur,
-                   omega=OMEGA, control=cp)
+    results, _, cp = run_protocol_grid(model, cluster, duration=dur,
+                                       registry=registry)
     assert cp.peak_buffered <= OMEGA
-    rows.append(Row(f"throughput/{tag}/fedoptima", us,
-                    f"samples_per_s={fo.throughput:.1f}"))
+    fo = results["fedoptima"]["metrics"]
     best = 0.0
-    for name, fn in REGISTRY.items():
-        b, us = timed(fn, model, cluster, duration=dur)
-        rows.append(Row(f"throughput/{tag}/{name}", us,
-                        f"samples_per_s={b.throughput:.1f}"))
-        best = max(best, b.throughput)
+    for name, r in results.items():
+        m = r["metrics"]
+        steady = m.steady_summary()
+        thr_steady = steady.get("throughput_steady", m.throughput)
+        rows.append(Row(f"throughput/{tag}/{name}", r["us"],
+                        f"samples_per_s={m.throughput:.1f}"
+                        f";steady={thr_steady:.1f}"))
+        if name != "fedoptima":
+            best = max(best, m.throughput)
     speedup = fo.throughput / max(best, 1e-9)
     rows.append(Row(f"throughput/{tag}/speedup_vs_best_baseline", 0.0,
                     f"x={speedup:.2f}"))
     record[tag] = {"fedoptima_samples_per_s": fo.throughput,
+                   "fedoptima_steady": fo.steady_summary(),
                    "speedup_vs_best_baseline": speedup}
     return rows
 
@@ -127,16 +129,20 @@ def run_checkpoint_overlap(model, cluster, tag, record):
 
 def main() -> list[Row]:
     record: dict = {"smoke": common.SMOKE, "duration_s": bench_duration(600.0)}
+    registry = MetricsRegistry()
     rows = []
-    rows += run(VGG5_SPLIT, testbed_a(), "A_vgg5", record)
-    rows += run(MOBILENET_SPLIT, testbed_b(), "B_mobilenet", record)
-    rows += run(TRANSFORMER6_SPLIT, testbed_a(), "A_transformer6", record)
-    rows += run(TRANSFORMER12_SPLIT, testbed_b(), "B_transformer12", record)
+    rows += run(VGG5_SPLIT, testbed_a(), "A_vgg5", record, registry)
+    rows += run(MOBILENET_SPLIT, testbed_b(), "B_mobilenet", record,
+                registry)
+    rows += run(TRANSFORMER6_SPLIT, testbed_a(), "A_transformer6", record,
+                registry)
+    rows += run(TRANSFORMER12_SPLIT, testbed_b(), "B_transformer12", record,
+                registry)
     rows += run_executor_throughput(TRANSFORMER6_SPLIT, testbed_a(),
                                     "A_transformer6", record)
     rows += run_checkpoint_overlap(TRANSFORMER6_SPLIT, testbed_a(),
                                    "A_transformer6", record)
-    write_record(OUT_PATH, record)
+    write_record(OUT_PATH, record, registry=registry)
     rows.append(Row("throughput/json", 0.0,
                     f"wrote={os.path.basename(OUT_PATH)}"))
     return rows

@@ -56,10 +56,15 @@ def env_meta() -> dict:
             "smoke": SMOKE}
 
 
-def write_record(path: str, record: dict) -> None:
+def write_record(path: str, record: dict, registry=None) -> None:
     """Write one BENCH_*.json record, stamped with :func:`env_meta`
-    (callers may pre-set ``env`` to override)."""
+    (callers may pre-set ``env`` to override).  ``registry`` (a
+    :class:`repro.obs.metrics.MetricsRegistry`) merges its snapshot under
+    a ``"metrics"`` key — the benchmark's own instruments ride the
+    record instead of a second ad-hoc accounting block."""
     record.setdefault("env", env_meta())
+    if registry is not None:
+        record.setdefault("metrics", registry.snapshot())
     with open(path, "w") as f:
         json.dump(record, f, indent=2)
     print(f"wrote {path}")
@@ -98,6 +103,54 @@ TRANSFORMER12_SPLIT = SimModel(
     dev_fwd_flops=1.6e9, dev_bwd_flops=3.2e9, full_fwd_flops=1.05e10,
     srv_flops_per_batch=2.6e10, act_bytes=1.64e6, dev_model_bytes=0.8e6,
     full_model_bytes=9e6, batch_size=32)
+
+
+def run_protocol_grid(model: SimModel, cluster: SimCluster, *,
+                      duration: float, omega: int = OMEGA,
+                      registry=None, trace: bool = False,
+                      control_kw: dict | None = None):
+    """Run FedOptima + every registered baseline once on (model, cluster).
+
+    The shared per-protocol loop behind ``bench_idle`` and
+    ``bench_throughput``: one FedOptima run through the integrated
+    :class:`ControlPlane` plus each :data:`repro.core.baselines.REGISTRY`
+    entry, each wall-timed through the unified metrics registry
+    (``bench.us.<protocol>`` histograms — a re-run of the same grid
+    accumulates instead of overwriting).
+
+    ``trace=True`` attaches a fresh sim-domain ``Tracer`` per protocol so
+    callers can feed :func:`repro.obs.idle.attribute_idle` (the tracer is
+    detached between protocols: each trace covers exactly one run).
+
+    Returns ``(results, registry, cp)``: ``results`` maps protocol name
+    -> ``{"metrics", "us", "tracer"}`` (tracer ``None`` when off), and
+    ``cp`` is FedOptima's control plane for ω-cap assertions.
+    """
+    from repro.core.baselines import REGISTRY
+    from repro.core.simulation import simulate_fedoptima
+    from repro.obs.metrics import MetricsRegistry
+    from repro.obs.trace import Tracer, traced
+
+    reg = registry if registry is not None else MetricsRegistry()
+    cp = fedoptima_control(cluster, omega, **(control_kw or {}))
+    results: dict = {}
+
+    def one(name, fn, *args, **kw):
+        tracer = Tracer(domain="sim") if trace else None
+        if tracer is not None:
+            with traced(tracer):
+                m, us = timed(fn, *args, **kw)
+        else:
+            m, us = timed(fn, *args, **kw)
+        # benchmark wall times span µs..minutes; widen the bucket range
+        reg.histogram(f"bench.us.{name}", lo=1.0, hi=1e9).observe(us)
+        results[name] = {"metrics": m, "us": us, "tracer": tracer}
+
+    one("fedoptima", simulate_fedoptima, model, cluster,
+        duration=duration, omega=omega, control=cp)
+    for name, fn in REGISTRY.items():
+        one(name, fn, model, cluster, duration=duration)
+    return results, reg, cp
 
 
 def testbed_a() -> SimCluster:

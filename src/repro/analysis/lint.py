@@ -12,10 +12,14 @@ RP001  unseeded-random       no global/unseeded ``np.random.*`` in hot
                              must go through a seeded ``default_rng`` so
                              sim results replay bit-for-bit.  ``data/``
                              and ``launch/`` are exempt (allowlist).
-RP002  wallclock             no ``time.time()``/``time.time_ns()`` in hot
-                             paths — simulated time is the only clock
-                             there (``perf_counter``/``monotonic`` for
-                             intervals is fine; it never feeds logic).
+RP002  wallclock             no direct ``time.*`` clock reads in hot
+                             paths: ``time.time()``/``time_ns()`` because
+                             simulated time is the only logic clock, and
+                             ``perf_counter``/``monotonic`` (+ ``_ns``)
+                             because instrumented intervals must come
+                             from the ONE sanctioned wall clock,
+                             ``repro.obs.clock.now()`` — one clock per
+                             time domain, so span/stats intervals agree.
 RP003  hash-seed             builtin ``hash()`` is salted per process
                              (PYTHONHASHSEED) and must never derive seeds
                              or keys; use ``zlib.crc32`` or a Generator.
@@ -35,7 +39,8 @@ RP006  statedict-version     every ``state_dict`` writer must emit an
                              "version_tag"), or restored snapshots can't
                              be migrated.
 
-A finding can be waived per line with ``# lint: allow-<rule-name>``.
+A finding can be waived per line with ``# lint: allow-<rule-name>`` or
+``# lint: allow-rp00N`` (the lowercase rule id).
 """
 from __future__ import annotations
 
@@ -47,7 +52,8 @@ from pathlib import Path
 __all__ = ["LintError", "RULES", "lint_file", "lint_paths", "main"]
 
 #: path segments in scope for the hot-path rules (RP001/RP002)
-HOT_SEGMENTS = ("core", "fleet", "runtime", "checkpoint", "faults")
+HOT_SEGMENTS = ("core", "fleet", "runtime", "checkpoint", "faults",
+                "memory")
 #: path segments where bare asserts are banned outright (RP004): state
 #: these modules guard must survive ``python -O``
 STRICT_SEGMENTS = ("core", "runtime", "checkpoint", "faults")
@@ -133,14 +139,16 @@ class _Pass(ast.NodeVisitor):
         self._func_stack: list[dict] = []
 
     # -- helpers ---------------------------------------------------------
-    def _waived(self, line: int, rule_name: str) -> bool:
+    def _waived(self, line: int, rule: str, rule_name: str) -> bool:
         if 1 <= line <= len(self.lines):
-            return f"# lint: allow-{rule_name}" in self.lines[line - 1]
+            text = self.lines[line - 1]
+            return f"# lint: allow-{rule_name}" in text or \
+                f"# lint: allow-{rule.lower()}" in text
         return False
 
     def _err(self, node: ast.AST, rule: str, message: str):
         name = RULES[rule]
-        if not self._waived(node.lineno, name):
+        if not self._waived(node.lineno, rule, name):
             self.errors.append(LintError(self.rel, node.lineno, rule,
                                          name, message))
 
@@ -202,13 +210,21 @@ class _Pass(ast.NodeVisitor):
                           "entropy-seeded; pass an explicit seed")
             # RP002 — wall clock in hot paths
             if isinstance(func, ast.Attribute) and \
-                    func.attr in ("time", "time_ns") and \
                     isinstance(func.value, ast.Name) and \
                     func.value.id == "time":
-                self._err(node, "RP002",
-                          f"time.{func.attr}() in a hot path; simulated "
-                          "runs must not read the wall clock (use the "
-                          "sim clock, or perf_counter for pure timing)")
+                if func.attr in ("time", "time_ns"):
+                    self._err(node, "RP002",
+                              f"time.{func.attr}() in a hot path; "
+                              "simulated runs must not read the wall "
+                              "clock (use the sim clock; for wall "
+                              "intervals use repro.obs.clock.now())")
+                elif func.attr in ("perf_counter", "perf_counter_ns",
+                                   "monotonic", "monotonic_ns"):
+                    self._err(node, "RP002",
+                              f"time.{func.attr}() in an instrumented "
+                              "hot path; read the obs clock "
+                              "(repro.obs.clock.now()) so spans and "
+                              "stats share one time domain")
         # RP003 — builtin hash() anywhere
         if isinstance(func, ast.Name) and func.id == "hash":
             self._err(node, "RP003",

@@ -36,6 +36,7 @@ from repro.analysis import sanitize as _san
 from repro.faults.inject import FaultInjector, install_timeouts
 from repro.faults.quarantine import UpdateGate
 from repro.fleet.traces import install_fleet, resolve_fleet
+from repro.obs import trace as _tr
 
 from .simulation import Metrics, Sim, SimCluster, SimModel
 
@@ -90,8 +91,8 @@ def simulate_classic_fl(model: SimModel, cluster: SimCluster, *,
         start = sim.t
 
         def done():
-            m.dev_busy[k] += sim.t - start
-            m.dev_samples += model.batch_size
+            m.note_dev_busy(k, start, sim.t, name="train",
+                            samples=model.batch_size)
             if hooks:
                 hooks.device_iter(k, False)
             if h_left > 1:
@@ -121,10 +122,11 @@ def simulate_classic_fl(model: SimModel, cluster: SimCluster, *,
         pending["n"] -= 1
         if pending["n"] <= 0:
             start = sim.t
+            m.note_warmup_end(start)
             dt = model.agg_flops * max(1, K) / cluster.srv_flops
 
             def agg_done():
-                m.srv_busy += sim.t - start
+                m.note_srv_busy(start, sim.t, name="aggregate")
                 m.aggregations += 1
                 if hooks:
                     hooks.sync_aggregate()
@@ -170,11 +172,15 @@ def _simulate_async_full(model: SimModel, cluster: SimCluster, *, duration,
         if _san.TRACING:
             _san.emit("sim.device_left", sim=sim, device=int(k),
                       epoch=int(epoch[k]))
+        if _tr.TRACING:
+            _tr.emit_instant(f"dev/{k}", "leave", sim.t)
 
     def on_rejoin(k):
         if _san.TRACING:
             _san.emit("sim.device_join", sim=sim, device=int(k),
                       epoch=int(epoch[k]))
+        if _tr.TRACING:
+            _tr.emit_instant(f"dev/{k}", "join", sim.t)
         dev_round(k)
 
     def dev_round(k):
@@ -194,8 +200,8 @@ def _simulate_async_full(model: SimModel, cluster: SimCluster, *, duration,
         def done():
             if not active[k] or epoch[k] != e:
                 return
-            m.dev_busy[k] += sim.t - start
-            m.dev_samples += model.batch_size
+            m.note_dev_busy(k, start, sim.t, name="train",
+                            samples=model.batch_size)
             if hooks:
                 hooks.device_iter(k, False)
             if h_left > 1:
@@ -231,13 +237,14 @@ def _simulate_async_full(model: SimModel, cluster: SimCluster, *, duration,
             return
         srv["busy"] = True
         start = sim.t
+        m.note_warmup_end(start)
         batch = queue[:buffer_size]
         del queue[:buffer_size]
         srv["buffer"] -= len(batch)
         dt = model.agg_flops * len(batch) / cluster.srv_flops
 
         def agg_done():
-            m.srv_busy += sim.t - start
+            m.note_srv_busy(start, sim.t, name="aggregate")
             m.aggregations += 1
             for kk, _ in batch:
                 m.note_contribution(kk)
@@ -332,11 +339,15 @@ def _simulate_split(model: SimModel, cluster: SimCluster, *, duration, H,
         if _san.TRACING:
             _san.emit("sim.device_left", sim=sim, device=int(k),
                       epoch=int(epoch[k]))
+        if _tr.TRACING:
+            _tr.emit_instant(f"dev/{k}", "leave", sim.t)
 
     def on_rejoin(k):
         if _san.TRACING:
             _san.emit("sim.device_join", sim=sim, device=int(k),
                       epoch=int(epoch[k]))
+        if _tr.TRACING:
+            _tr.emit_instant(f"dev/{k}", "join", sim.t)
         dev_round(k)
 
     def dev_round(k):
@@ -359,16 +370,23 @@ def _simulate_split(model: SimModel, cluster: SimCluster, *, duration, H,
         def fwd_done():
             if not active[k] or epoch[k] != e:
                 return
-            m.dev_busy[k] += sim.t - start
+            m.note_dev_busy(k, start, sim.t, name="fwd")
             tx = model.act_bytes / bw[k]
             m.bytes_up += model.act_bytes
+            if _tr.TRACING:
+                _tr.emit_span(f"net/{k}", "act_upload", sim.t, sim.t + tx,
+                              clip=True)
             sim.after(tx, srv_request, k, h_left, e)
             # PiPar: overlap — start next microbatch fwd while waiting
             if pipeline and h_left > 1:
                 start2 = sim.t
 
                 def fwd2_done():
-                    m.dev_busy[k] += sim.t - start2
+                    # overlapped fwd rides a pipeline sub-lane: the device
+                    # is genuinely busy twice over, which one lane cannot
+                    # render without overlap
+                    m.note_dev_busy(k, start2, sim.t, name="fwd_overlap",
+                                    lane=f"dev/{k}/pipe")
                 sim.after(t_fwd[k], fwd2_done)
         sim.after(t_fwd[k], fwd_done)
 
@@ -382,10 +400,11 @@ def _simulate_split(model: SimModel, cluster: SimCluster, *, duration, H,
         srv["busy"] = True
         k, h_left, e = srv_queue.pop(0)
         start = sim.t
+        m.note_warmup_end(start)
         dt = model.srv_flops_per_batch / cluster.srv_flops
 
         def done():
-            m.srv_busy += sim.t - start
+            m.note_srv_busy(start, sim.t, name="train_batch")
             m.srv_batches += 1
             m.note_contribution(k)
             if hooks:
@@ -410,8 +429,8 @@ def _simulate_split(model: SimModel, cluster: SimCluster, *, duration, H,
                     barrier_arrive()
                 return
             # PiPar already accounted the overlapped fwd busy time
-            m.dev_busy[k] += sim.t - start
-            m.dev_samples += model.batch_size
+            m.note_dev_busy(k, start, sim.t, name="bwd",
+                            samples=model.batch_size)
             if hooks:
                 hooks.device_iter(k, True)
             if h_left > 1:
@@ -454,10 +473,11 @@ def _simulate_split(model: SimModel, cluster: SimCluster, *, duration, H,
         else:
             # OAFL: async aggregation immediately (serialized on server)
             start = sim.t
+            m.note_warmup_end(start)
             dt = model.agg_flops / cluster.srv_flops
 
             def agg_done():
-                m.srv_busy += sim.t - start
+                m.note_srv_busy(start, sim.t, name="aggregate")
                 m.aggregations += 1
                 if hooks:
                     hooks.aggregate(k)
@@ -478,10 +498,11 @@ def _simulate_split(model: SimModel, cluster: SimCluster, *, duration, H,
         barrier["n"] -= 1
         if barrier["n"] <= 0:
             start = sim.t
+            m.note_warmup_end(start)
             dt = model.agg_flops * K / cluster.srv_flops
 
             def agg_done():
-                m.srv_busy += sim.t - start
+                m.note_srv_busy(start, sim.t, name="aggregate")
                 m.aggregations += 1
                 m.rounds += 1
                 if hooks:

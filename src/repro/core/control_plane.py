@@ -77,6 +77,8 @@ import numpy as np
 
 from repro.analysis import sanitize as _san
 from repro.memory.policy import make_eviction_policy
+from repro.obs import trace as _tr
+from repro.obs.clock import now as _now
 
 from .aggregator import staleness_weight
 from .flow_control import FlowController
@@ -270,6 +272,7 @@ class ControlPlane:
         flow tokens, peak buffers) is committed immediately: in the lockstep
         datacenter mapping the mesh executes exactly this schedule.
         """
+        tp0 = _now() if _tr.TRACING else 0.0
         G, H = self.G, self.H
         active = np.ones(G, bool) if active is None else \
             np.asarray(active, bool)
@@ -320,6 +323,9 @@ class ControlPlane:
             _san.emit("cp.plan", cp=self, plan=plan,
                       version=int(self.version),
                       live_slots=self.live_slots, pool_live=self.pool_live)
+        if _tr.TRACING:
+            _tr.emit_span("host/control", "plan_round", tp0, _now(),
+                          version=int(self.version))
         return plan
 
     def retain_group(self, g: int, params):
@@ -496,6 +502,7 @@ class ControlPlane:
         aggregation event (version +1).  Accepted groups (staleness ≤ D)
         sync to the new global model; rejected/absent ones drift further
         (Alg. 4 lines 12–20 telescoped per round)."""
+        tf0 = _now() if _tr.TRACING else 0.0
         active = np.ones(self.G, bool) if active is None else \
             np.asarray(active, bool)
         t = self.version
@@ -511,6 +518,9 @@ class ControlPlane:
             if _san.TRACING:
                 _san.emit("cp.finish", cp=self, version_before=int(t),
                           version_after=int(t), n_accepted=0)
+            if _tr.TRACING:
+                _tr.emit_span("host/control", "finish_round", tf0, _now(),
+                              n_accepted=0)
             return
         self.version = t + 1
         for g in np.flatnonzero(active):
@@ -522,6 +532,9 @@ class ControlPlane:
             _san.emit("cp.finish", cp=self, version_before=int(t),
                       version_after=int(self.version),
                       n_accepted=len(accepted))
+        if _tr.TRACING:
+            _tr.emit_span("host/control", "finish_round", tf0, _now(),
+                          n_accepted=len(accepted))
 
     # -- event-simulator staleness hooks (per-arrival, version always
     #    advances: the simulator counts every aggregation event) --

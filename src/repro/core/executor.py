@@ -42,7 +42,6 @@ occupancy.
 """
 from __future__ import annotations
 
-import time
 from collections import deque
 from dataclasses import dataclass, field
 
@@ -50,6 +49,9 @@ import numpy as np
 
 from repro.analysis import sanitize as _san
 from repro.core.handles import HandleRing, RoundHandle
+from repro.obs import trace as _tr
+from repro.obs.clock import now as _now
+from repro.obs.metrics import MetricsRegistry
 
 
 # ---------------------------------------------------------------------------
@@ -276,7 +278,7 @@ class RoundExecutor:
     def __init__(self, step, cplane, *, window: int = 1, profiles=None,
                  gather=None, scatter=None, registry=None,
                  store=None, gather_slot=None, scatter_slot=None,
-                 faults=None):
+                 faults=None, metrics=None):
         if window < 1:
             raise ValueError(f"window must be >= 1, got {window}")
         self.step = step
@@ -291,9 +293,17 @@ class RoundExecutor:
         self.scatter_slot = scatter_slot
         self.faults = faults
         self.stats: list[RoundStats] = []
-        self.peak_in_flight = 0
-        self.total_host_s = 0.0
-        self.hidden_host_s = 0.0
+        # -- instruments (pure bookkeeping; legacy names are properties) --
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._g_in_flight = self.metrics.gauge("exec.in_flight")
+        self._c_host_s = self.metrics.counter("exec.host_s")
+        self._c_hidden_s = self.metrics.counter("exec.hidden_host_s")
+        self._c_ckpt_flush = self.metrics.counter("exec.ckpt_flush")
+        self._c_ckpt_noflush = self.metrics.counter("exec.ckpt_noflush")
+        self._g_handle_bytes = self.metrics.gauge("exec.handle_bytes")
+        self._h_plan = self.metrics.histogram("exec.plan_s")
+        self._h_build = self.metrics.histogram("exec.build_s")
+        self._h_wall = self.metrics.histogram("exec.round_wall_s")
         self._pending: deque = deque()     # (RoundStats, metrics futures)
         self._last_drain_t: float | None = None
         self._last_completion_t: float | None = None
@@ -312,9 +322,31 @@ class RoundExecutor:
         self._churn_seen = False
         self.handles = HandleRing(depth=window + 1)
         self._deferred: deque[RoundHandle] = deque()   # no-flush saves
-        self.n_ckpt_flush = 0        # saves behind a full pipeline drain
-        self.n_ckpt_noflush = 0      # saves from a handle, pipe in flight
-        self.handle_bytes_peak = 0   # ring + deferred high-water mark
+
+    # legacy counter names, read-only over the registry instruments
+    @property
+    def peak_in_flight(self) -> int:
+        return int(self._g_in_flight.peak)
+
+    @property
+    def total_host_s(self) -> float:
+        return self._c_host_s.value
+
+    @property
+    def hidden_host_s(self) -> float:
+        return self._c_hidden_s.value
+
+    @property
+    def n_ckpt_flush(self) -> int:
+        return int(self._c_ckpt_flush.value)
+
+    @property
+    def n_ckpt_noflush(self) -> int:
+        return int(self._c_ckpt_noflush.value)
+
+    @property
+    def handle_bytes_peak(self) -> int:
+        return int(self._g_handle_bytes.peak)
 
     # ------------------------------------------------------------------
     def run(self, state, start_round: int, end_round: int, *, active_fn,
@@ -349,7 +381,7 @@ class RoundExecutor:
             else bool(checkpoint_flush)
         history: list[dict] = []
         for r in range(start_round, end_round):
-            t0 = time.perf_counter()
+            t0 = _now()
             active = np.asarray(active_fn(r), bool)
             H = self.cplane.H
             produce = self.profiles.produce(H) if self.profiles is not None \
@@ -369,9 +401,13 @@ class RoundExecutor:
                 lookahead=self.window if self.store is not None else 0)
             state = self._apply_retention(state, plan, r)
             state = self._apply_memory(state, plan, r)
-            t1 = time.perf_counter()
+            t1 = _now()
             batch = batch_fn(r, plan)
-            t2 = time.perf_counter()
+            t2 = _now()
+            if _tr.TRACING:
+                _tr.emit_span("host/plan", "plan_round", t0, t1, round=int(r))
+                _tr.emit_span("host/build", "build_batch", t1, t2,
+                              round=int(r))
             st = RoundStats(round=r, plan_s=t1 - t0, build_s=t2 - t1,
                             in_flight_at_dispatch=len(self._pending),
                             plan=plan, _host_t0=t0, _dispatch_t=t2)
@@ -382,8 +418,7 @@ class RoundExecutor:
                 _san.emit("exec.round", cp=self.cplane, store=self.store,
                           round=int(r), in_flight=len(self._pending))
             self._pending.append((st, metrics))
-            self.peak_in_flight = max(self.peak_in_flight,
-                                      len(self._pending))
+            self._g_in_flight.set(len(self._pending))
             due = checkpoint_fn is not None and checkpoint_every and \
                 (r + 1) % checkpoint_every == 0
             self._capture_round(r, state, due and not flush, capture_fn)
@@ -392,6 +427,7 @@ class RoundExecutor:
             if due and flush:
                 while self._pending:          # flush: state == round r
                     self._drain_one(history, on_metrics)
+                tc0 = _now() if _tr.TRACING else 0.0
                 if capture_fn is None:
                     checkpoint_fn(r, state)   # legacy (r, state) contract
                 else:
@@ -399,7 +435,10 @@ class RoundExecutor:
                     # dispatch, so the handle wraps it without copying
                     checkpoint_fn(r, RoundHandle.capture(
                         r, state, meta=capture_fn(r), copy=False))
-                self.n_ckpt_flush += 1
+                if _tr.TRACING:
+                    _tr.emit_span("host/ckpt", "ckpt_flush", tc0, _now(),
+                                  round=int(r))
+                self._c_ckpt_flush.inc()
             self._service_deferred(checkpoint_fn, now=r)
         while self._pending:
             self._drain_one(history, on_metrics)
@@ -432,14 +471,17 @@ class RoundExecutor:
         light = keys and isinstance(state, dict)
         if not (light or ckpt_due):
             return
+        tc0 = _now() if _tr.TRACING else 0.0
         if ckpt_due:
             meta = capture_fn(r) if capture_fn is not None else None
             h = RoundHandle.capture(r, state, meta=meta, to_host=True)
             self._deferred.append(h)
         if light:
             self.handles.push(RoundHandle.capture(r, state, keys=keys))
-        self.handle_bytes_peak = max(
-            self.handle_bytes_peak,
+        if _tr.TRACING:
+            _tr.emit_span("host/capture", "capture_handle", tc0, _now(),
+                          round=int(r))
+        self._g_handle_bytes.set(
             self.handles.nbytes + sum(h.nbytes for h in self._deferred))
 
     def _service_deferred(self, checkpoint_fn, *, now=None,
@@ -455,8 +497,12 @@ class RoundExecutor:
                     or (now is not None and now - h.round >= self.window)):
                 break
             self._deferred.popleft()
+            tc0 = _now() if _tr.TRACING else 0.0
             checkpoint_fn(h.round, h)
-            self.n_ckpt_noflush += 1
+            if _tr.TRACING:
+                _tr.emit_span("host/ckpt", "ckpt_deferred", tc0, _now(),
+                              round=int(h.round))
+            self._c_ckpt_noflush.inc()
 
     # ------------------------------------------------------------------
     def _apply_retention(self, state, plan, r: int):
@@ -514,6 +560,7 @@ class RoundExecutor:
         staging of lookahead pool entries."""
         if not (plan.fill or plan.spill or plan.prefetch):
             return state
+        tm0 = _now() if _tr.TRACING else 0.0
         if self.store is None or self.gather_slot is None or \
                 self.scatter_slot is None:
             raise RuntimeError(
@@ -543,6 +590,11 @@ class RoundExecutor:
                 self.store.spill(key, self.gather_slot(state, s))
         for key in plan.prefetch:
             self.store.prefetch(key)
+        if _tr.TRACING:
+            _tr.emit_span("host/memory", "fill_spill", tm0, _now(),
+                          round=int(r), fills=len(plan.fill),
+                          spills=len(plan.spill),
+                          prefetch=len(plan.prefetch))
         return state
 
     def _check_cap(self, r: int):
@@ -560,9 +612,9 @@ class RoundExecutor:
 
     def _drain_one(self, history, on_metrics):
         st, metrics = self._pending.popleft()
-        t_fetch = time.perf_counter()
+        t_fetch = _now()
         m = {k: float(v) for k, v in metrics.items()}   # blocks here only
-        t = time.perf_counter()
+        t = _now()
         # device-completion estimate: a blocking fetch pins the completion
         # at its return; a non-blocking fetch means the round finished at
         # some unobservable earlier point — fall back to its dispatch time
@@ -588,8 +640,28 @@ class RoundExecutor:
         st.round_wall_s = wall
         if self.profiles is not None:
             self.profiles.observe_round(wall, self.cplane.H)
-        self.total_host_s += st.plan_s + st.build_s
-        self.hidden_host_s += st.hidden_host_s
+        self._c_host_s.inc(st.plan_s + st.build_s)
+        self._c_hidden_s.inc(st.hidden_host_s)
+        self._h_plan.observe(st.plan_s)
+        self._h_build.observe(st.build_s)
+        self._h_wall.observe(wall)
+        if _tr.TRACING:
+            # mesh busy: dispatch → observed completion (clipped so
+            # pipelined rounds tile the lane instead of overlapping);
+            # device lanes mirror it for the groups the plan broadcast to
+            _tr.emit_span("host/drain", "drain", t_fetch, t,
+                          round=int(st.round))
+            end = completion if completion > st._dispatch_t \
+                else st._dispatch_t + wall
+            _tr.emit_span("mesh", "round", st._dispatch_t, end,
+                          clip=True, round=int(st.round))
+            if st.plan is not None and \
+                    getattr(st.plan, "bcast_mask", None) is not None:
+                for g in np.nonzero(
+                        np.asarray(st.plan.bcast_mask) > 0.5)[0]:
+                    _tr.emit_span(f"dev/{int(g)}", "round",
+                                  st._dispatch_t, end, clip=True,
+                                  round=int(st.round))
         self.stats.append(st)
         history.append(m)
         if on_metrics is not None:

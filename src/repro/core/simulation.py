@@ -21,6 +21,7 @@ import numpy as np
 
 from repro.analysis import sanitize as _san
 from repro.faults.inject import FaultInjector, install_timeouts
+from repro.obs import trace as _tr
 from repro.faults.quarantine import UpdateGate
 from repro.fleet.devices import heterogeneous_cluster  # noqa: F401 re-export
 from repro.fleet.selection import (SelectionContext, balance_summary,
@@ -123,12 +124,21 @@ class Metrics:
                                          # under a fault schedule: per-class
                                          # injected/recovered/disposition
                                          # counters + gate summary
+    # -- steady-state (warmup-excluded) accounting: the sim-mode mirror of
+    #    the executor's hidden_host_frac_steady.  warmup ends at the
+    #    server's first dequeue (pipeline fill); see note_warmup_end.
+    warmup_t: float = None
+    dev_busy_steady: np.ndarray = None
+    srv_busy_steady: float = 0.0
+    dev_samples_steady: int = 0
 
     def __post_init__(self):
         if self.dev_busy is None:
             self.dev_busy = np.zeros(self.K)
         if self.dev_consumed is None:
             self.dev_consumed = np.zeros(self.K, np.int64)
+        if self.dev_busy_steady is None:
+            self.dev_busy_steady = np.zeros(self.K)
 
     # -- derived --
     @property
@@ -159,6 +169,89 @@ class Metrics:
         perfectly balanced contributions across the fleet)."""
         return balance_summary(self.dev_consumed)
 
+    # -- busy-interval accounting (one mechanism for every protocol) ----
+    #
+    # Simulators call these instead of touching dev_busy/srv_busy
+    # directly: the interval feeds (a) the legacy totals bit-for-bit,
+    # (b) the steady-state accumulators, and (c) — only when a tracer is
+    # attached — a span on the device/server lane.
+    def note_warmup_end(self, t: float):
+        """The server started real work: everything before is pipeline
+        fill.  Idempotent; note_srv_busy calls it defensively."""
+        if self.warmup_t is None:
+            self.warmup_t = float(t)
+
+    def note_dev_busy(self, k: int, start: float, end: float, *,
+                      name: str = "step", lane: str | None = None,
+                      samples: int = 0):
+        self.dev_busy[k] += end - start
+        if samples:
+            self.dev_samples += samples
+        if self.warmup_t is not None:
+            self.dev_busy_steady[k] += max(0.0,
+                                           end - max(start, self.warmup_t))
+            if samples and end >= self.warmup_t:
+                self.dev_samples_steady += samples
+        if _tr.TRACING:
+            _tr.emit_span(lane if lane is not None else f"dev/{k}",
+                          name, start, end, clip=True)
+
+    def note_srv_busy(self, start: float, end: float, *,
+                      name: str = "train_batch", lane: str = "srv"):
+        self.note_warmup_end(start)
+        self.srv_busy += end - start
+        self.srv_busy_steady += end - max(start, self.warmup_t)
+        if _tr.TRACING:
+            _tr.emit_span(lane, name, start, end, clip=True)
+
+    def steady_summary(self) -> dict:
+        """Warmup-excluded idle/throughput stats (the executor's
+        ``*_steady`` keys, sim-side)."""
+        w = self.warmup_t if self.warmup_t is not None else self.duration
+        steady = max(self.duration - w, 0.0)
+        if steady <= 0.0:
+            return {"warmup_s": w, "steady_s": 0.0,
+                    "srv_idle_frac_steady": 0.0,
+                    "dev_idle_frac_steady": 0.0,
+                    "throughput_steady": 0.0}
+        return {
+            "warmup_s": w,
+            "steady_s": steady,
+            "srv_idle_frac_steady": 1.0 - self.srv_busy_steady / steady,
+            "dev_idle_frac_steady":
+                float(np.mean(1.0 - self.dev_busy_steady / steady)),
+            "throughput_steady": self.dev_samples_steady / steady,
+        }
+
+    def to_registry(self, reg=None, at: float | None = None):
+        """Mirror the run's accounting into a MetricsRegistry (fresh one
+        by default).  ``at`` overrides the horizon for mid-run dumps."""
+        from repro.obs.metrics import MetricsRegistry
+        if reg is None:
+            reg = MetricsRegistry()
+        horizon = max(self.duration if at is None else at, 1e-9)
+        for name, v in (("sim.dev_busy_s", float(self.dev_busy.sum())),
+                        ("sim.srv_busy_s", self.srv_busy),
+                        ("sim.bytes_up", self.bytes_up),
+                        ("sim.bytes_down", self.bytes_down),
+                        ("sim.dev_samples", self.dev_samples),
+                        ("sim.srv_batches", self.srv_batches),
+                        ("sim.aggregations", self.aggregations)):
+            inst = reg.counter(name)
+            inst.inc(max(v - inst.value, 0.0))
+        reg.gauge("sim.max_buffered").set(self.max_buffered)
+        reg.gauge("sim.srv_idle_frac").set(
+            1.0 - self.srv_busy / horizon)
+        reg.gauge("sim.dev_idle_frac").set(
+            float(np.mean(1.0 - self.dev_busy / horizon)))
+        reg.gauge("sim.throughput").set(self.dev_samples / horizon)
+        if self.warmup_t is not None and at is None:
+            ss = self.steady_summary()
+            for key in ("srv_idle_frac_steady", "dev_idle_frac_steady",
+                        "throughput_steady", "warmup_s"):
+                reg.gauge(f"sim.{key}").set(ss[key])
+        return reg
+
 
 # ---------------------------------------------------------------------------
 # FedOptima simulation (paper §3.3, Alg. 1–4, Fig. 1(d))
@@ -172,7 +265,8 @@ def simulate_fedoptima(model: SimModel, cluster: SimCluster, *,
                        registry=None, seed: int = 0,
                        control: ControlPlane | None = None,
                        profiles: StragglerProfiles | None = None,
-                       faults=None, fault_gate=None) -> Metrics:
+                       faults=None, fault_gate=None,
+                       metrics_every: float = 0.0) -> Metrics:
     """Event simulation of FedOptima.
 
     hooks (optional): object with callbacks driving real training:
@@ -226,6 +320,9 @@ def simulate_fedoptima(model: SimModel, cluster: SimCluster, *,
         None builds a default UpdateGate, an UpdateGate instance is used
         as-is, and False disables the gate entirely (the no-armor
         benchmark leg: poisoned updates flow into training unrecovered).
+    metrics_every: simulated-seconds cadence for a one-line metrics dump
+        (stdout); 0 disables.  Pure print — scheduling it perturbs no
+        run state.
     """
     sim = Sim()
     K = cluster.K
@@ -324,8 +421,7 @@ def simulate_fedoptima(model: SimModel, cluster: SimCluster, *,
     def device_iter_done(k, h_left, start, e):
         if not active[k] or epoch[k] != e:
             return
-        m.dev_busy[k] += sim.t - start
-        m.dev_samples += model.batch_size
+        m.note_dev_busy(k, start, sim.t, samples=model.batch_size)
         prof.observe_group(k, step_s=sim.t - start)
         send = flow.can_send(k) and \
             (inj is None or inj.may_send(k, sim.t))
@@ -334,6 +430,9 @@ def simulate_fedoptima(model: SimModel, cluster: SimCluster, *,
             tx = model.act_bytes / bw[k]
             prof.observe_group(k, transfer_s=tx)
             m.bytes_up += model.act_bytes
+            if _tr.TRACING:
+                _tr.emit_span(f"net/{k}", "act_upload", sim.t, sim.t + tx,
+                              clip=True)
             tag = inj.tag_act_upload(k, sim.t) if inj is not None else None
             sim.after(tx, act_arrive, k, tag)
             if tag is not None and tag["dup_extra"] is not None:
@@ -349,6 +448,9 @@ def simulate_fedoptima(model: SimModel, cluster: SimCluster, *,
             # end of round: ship device model for aggregation (Alg. 1 l.13)
             tx = model.dev_model_bytes / bw[k]
             m.bytes_up += model.dev_model_bytes
+            if _tr.TRACING:
+                _tr.emit_span(f"net/{k}", "model_upload", sim.t, sim.t + tx,
+                              clip=True)
             extra, ckind = inj.tag_model_upload(k, sim.t) \
                 if inj is not None else (0.0, "")
             sim.after(tx + extra, model_arrive, k, e, ckind, extra > 0.0)
@@ -413,6 +515,7 @@ def simulate_fedoptima(model: SimModel, cluster: SimCluster, *,
         msg = sched.get()
         if msg is None:
             return
+        m.note_warmup_end(sim.t)
         srv_state["busy"] = True
         srv_state["cur"] = msg
         if msg.kind == "model":
@@ -429,7 +532,7 @@ def simulate_fedoptima(model: SimModel, cluster: SimCluster, *,
         if se != srv_state["epoch"]:
             return                      # in-service work lost to a crash
         srv_state["cur"] = None
-        m.srv_busy += sim.t - start
+        m.note_srv_busy(start, sim.t, name="aggregate")
         m.aggregations += 1
         if cp.aggregate_arrival(k, versions[k]) > 0.0 and hooks:
             hooks.aggregate(k)
@@ -456,7 +559,7 @@ def simulate_fedoptima(model: SimModel, cluster: SimCluster, *,
         if se != srv_state["epoch"]:
             return                      # in-service work lost to a crash
         srv_state["cur"] = None
-        m.srv_busy += sim.t - start
+        m.note_srv_busy(start, sim.t, name="train_batch")
         m.srv_batches += 1
         m.note_contribution(k)
         prof.observe_server(sim.t - start)
@@ -476,6 +579,8 @@ def simulate_fedoptima(model: SimModel, cluster: SimCluster, *,
         if _san.TRACING:
             _san.emit("sim.device_left", sim=sim, device=int(k),
                       epoch=int(epoch[k]))
+        if _tr.TRACING:
+            _tr.emit_instant(f"dev/{k}", "leave", sim.t)
         flow.on_device_left(k)
         # purge the consumption counter (§3.4.2: a rejoin starts with
         # fresh history); buffered activations still train
@@ -491,11 +596,16 @@ def simulate_fedoptima(model: SimModel, cluster: SimCluster, *,
         if _san.TRACING:
             _san.emit("sim.device_join", sim=sim, device=int(k),
                       epoch=int(epoch[k]))
+        if _tr.TRACING:
+            _tr.emit_instant(f"dev/{k}", "join", sim.t)
         device_start_round(k, H)
 
     # ---------------- injected fault windows ----------------
     def crash_begin(outage_s):
         inj.note_injected("server_crash")
+        if _tr.TRACING:
+            _tr.emit_instant("srv", "fault.crash_begin", sim.t,
+                             outage_s=outage_s)
         srv_state["down"] += 1
         srv_state["epoch"] += 1         # pending completions die stale
         cur = srv_state["cur"]
@@ -517,6 +627,8 @@ def simulate_fedoptima(model: SimModel, cluster: SimCluster, *,
     def crash_end():
         srv_state["down"] -= 1
         inj.note_recovered("server_crash", "crash_restart")
+        if _tr.TRACING:
+            _tr.emit_instant("srv", "fault.crash_end", sim.t)
         if not srv_state["down"]:
             kick_server()
 
@@ -548,6 +660,12 @@ def simulate_fedoptima(model: SimModel, cluster: SimCluster, *,
                          on_leave=on_leave, on_rejoin=on_rejoin)
         for ev in inj.crashes():
             sim.at(ev.t, crash_begin, float(ev.param))
+    if metrics_every and metrics_every > 0.0:
+        def _dump_metrics():
+            print(m.to_registry(at=sim.t).dump_line(
+                prefix=f"[sim t={sim.t:.1f}s]"))
+            sim.after(metrics_every, _dump_metrics)
+        sim.after(metrics_every, _dump_metrics)
     sim.run(duration)
     m.duration = duration
     if inj is not None:

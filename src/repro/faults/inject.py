@@ -32,6 +32,8 @@ import os
 
 import numpy as np
 
+from repro.obs import trace as _tr
+
 from .quarantine import UpdateGate, make_payload
 from .schedule import (BASELINE_CLASSES, POD_CLASSES, SIM_CLASSES,
                        FaultSchedule)
@@ -191,6 +193,9 @@ class FaultInjector(_Accounting):
             return True
         self.gate.note_reject(k, t)
         self.note_recovered("corrupt_act", "quarantined_act")
+        if _tr.TRACING:
+            _tr.emit_instant(f"dev/{k}", "fault.quarantine_act", t,
+                             kind=kind)
         return False
 
     def note_accept(self, k: int):
@@ -215,6 +220,9 @@ class FaultInjector(_Accounting):
             return True, 0.0
         backoff = self.gate.note_reject(k, t)
         self.note_recovered("corrupt_model", "quarantined_model")
+        if _tr.TRACING:
+            _tr.emit_instant(f"dev/{k}", "fault.quarantine_model", t,
+                             kind=kind, backoff=backoff)
         return False, backoff
 
     def note_delayed_arrival(self):
@@ -256,6 +264,9 @@ def install_timeouts(sim, inj: FaultInjector | None, active, trace, *,
             inj.note_disposition("timeout_noop")     # already away
             return
         inj.note_injected("timeout")
+        if _tr.TRACING:
+            _tr.emit_instant(f"dev/{k}", "fault.timeout_begin", sim.t,
+                             outage_s=outage_s)
         active[k] = False
         if on_leave is not None:
             on_leave(k)
@@ -270,6 +281,8 @@ def install_timeouts(sim, inj: FaultInjector | None, active, trace, *,
             return
         active[k] = True
         inj.note_recovered("timeout", "timeout_rejoined")
+        if _tr.TRACING:
+            _tr.emit_instant(f"dev/{k}", "fault.timeout_end", sim.t)
         if on_rejoin is not None:
             on_rejoin(k)
 

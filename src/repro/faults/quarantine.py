@@ -16,31 +16,54 @@ counters exact under injection (the sanitizer checks this).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-
 import numpy as np
+
+from repro.obs.metrics import MetricsRegistry
 
 #: fence on ||update||_inf — generous vs. real gradients (~O(1)) yet far
 #: below the 1e12-scaled "huge" poison payload
 DEFAULT_NORM_FENCE = 1e6
 
 
-@dataclass
 class UpdateGate:
-    norm_fence: float = DEFAULT_NORM_FENCE
-    strike_limit: int = 3          # strikes at/after which backoff applies
-    backoff: float = 30.0          # base re-admission delay (s / rounds)
-    backoff_growth: float = 2.0    # delay multiplier per extra strike
-    strikes: dict = field(default_factory=dict)
-    quarantined_until: dict = field(default_factory=dict)
-    n_checked: int = 0
-    n_rejected: int = 0
-    reject_reasons: dict = field(default_factory=dict)
+    """Validation gate with registry-backed check/reject accounting (the
+    legacy ``n_checked``/``n_rejected``/``reject_reasons`` attributes are
+    read-only views over the instruments; strike state stays plain)."""
+
+    def __init__(self, norm_fence: float = DEFAULT_NORM_FENCE,
+                 strike_limit: int = 3, backoff: float = 30.0,
+                 backoff_growth: float = 2.0, metrics=None):
+        self.norm_fence = norm_fence
+        self.strike_limit = strike_limit    # strikes at/after which backoff
+        self.backoff = backoff              # base re-admission delay
+        self.backoff_growth = backoff_growth
+        self.strikes: dict = {}
+        self.quarantined_until: dict = {}
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._c_checked = self.metrics.counter("gate.checked")
+        self._c_rejected = self.metrics.counter("gate.rejected")
+        self._g_struck = self.metrics.gauge("gate.devices_struck")
+
+    # legacy counter names, read-only over the registry instruments
+    @property
+    def n_checked(self) -> int:
+        return int(self._c_checked.value)
+
+    @property
+    def n_rejected(self) -> int:
+        return int(self._c_rejected.value)
+
+    @property
+    def reject_reasons(self) -> dict:
+        prefix = "gate.rejected."
+        return {name[len(prefix):]: int(c.value)
+                for name, c in self.metrics._counters.items()
+                if name.startswith(prefix) and c.value}
 
     # -- payload validation ------------------------------------------------
     def validate(self, payload) -> tuple:
         """(ok, reason) for one update payload (any array-like)."""
-        self.n_checked += 1
+        self._c_checked.inc()
         arr = np.asarray(payload, dtype=np.float64)
         if not np.all(np.isfinite(arr)):
             return self._reject("non_finite")
@@ -49,8 +72,8 @@ class UpdateGate:
         return True, ""
 
     def _reject(self, reason: str) -> tuple:
-        self.n_rejected += 1
-        self.reject_reasons[reason] = self.reject_reasons.get(reason, 0) + 1
+        self._c_rejected.inc()
+        self.metrics.counter(f"gate.rejected.{reason}").inc()
         return False, reason
 
     # -- per-device strike / backoff policy ---------------------------------
@@ -62,6 +85,7 @@ class UpdateGate:
         """
         k = int(k)
         self.strikes[k] = self.strikes.get(k, 0) + 1
+        self._g_struck.set(sum(1 for v in self.strikes.values() if v))
         over = self.strikes[k] - self.strike_limit
         if over < 0:
             return 0.0
@@ -75,6 +99,7 @@ class UpdateGate:
         k = int(k)
         if self.strikes.get(k, 0) > 0:
             self.strikes[k] -= 1
+            self._g_struck.set(sum(1 for v in self.strikes.values() if v))
 
     def may_send(self, k: int, t: float) -> bool:
         return t >= self.quarantined_until.get(int(k), 0.0)

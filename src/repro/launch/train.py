@@ -62,6 +62,7 @@ from repro.fleet import (FleetTrace, SelectionContext, balance_summary,
                          make_selection_policy, make_trace, sample_cluster)
 from repro.launch.mesh import make_debug_mesh, n_groups_of
 from repro.memory import ActivationStore
+from repro.obs.metrics import MetricsRegistry
 from repro.runtime.elastic import ElasticRegistry
 
 
@@ -199,7 +200,10 @@ def run_pod(args) -> dict:
                           policy=getattr(args, "policy", "counter"),
                           max_delay=getattr(args, "max_delay", 16),
                           pool_cap=pool_cap, eviction=eviction)
-    act_store = ActivationStore(pool_cap, quant=spill_quant)
+    # one registry backs the executor, spill store, and fault gate — the
+    # per-round dump and final snapshot see every component's instruments
+    reg = MetricsRegistry()
+    act_store = ActivationStore(pool_cap, quant=spill_quant, metrics=reg)
 
     # chaos plane (pod axis: round index) — built before resume so a
     # restarted run replays the SAME schedule, minus already-fired crashes
@@ -222,7 +226,8 @@ def run_pod(args) -> dict:
             if os.path.exists(fired_path):
                 with open(fired_path) as f:
                     fired = tuple(json.load(f))
-        injector = PodFaultInjector(faults_sched, gate=UpdateGate(),
+        injector = PodFaultInjector(faults_sched,
+                                    gate=UpdateGate(metrics=reg),
                                     fired_crashes=fired)
 
     like = jax.eval_shape(lambda: F.init_train_state(
@@ -354,7 +359,7 @@ def run_pod(args) -> dict:
         gather_slot=F.gather_act_slot,
         scatter_slot=lambda st, s, p: F.scatter_act_slot(
             st, s, p, state_shardings=s_spec),
-        faults=injector)
+        faults=injector, metrics=reg)
 
     if sel is not None and resumed_meta and "selection_rng" in resumed_meta \
             and hasattr(sel, "_rng"):
@@ -381,6 +386,7 @@ def run_pod(args) -> dict:
         return _make_batch(cfg, streams, rng, plan, put=b_spec)
 
     t0 = time.time()
+    metrics_every = int(getattr(args, "metrics_every", 0) or 0)
 
     def on_metrics(r, m, st):
         nonlocal t0
@@ -392,6 +398,8 @@ def run_pod(args) -> dict:
                   f"s_loss {m['s_loss']:.4f}  active {n_active}/{G}"
                   f"  {tok_s:,.0f} tok/s")
             t0 = time.time()
+        if metrics_every and (r + 1) % metrics_every == 0:
+            print(executor.metrics.dump_line(prefix=f"[round {r+1}]"))
 
     def capture_fn(r):
         """Dispatch-time host bookkeeping for round r's checkpoint —
@@ -470,7 +478,14 @@ def run_pod(args) -> dict:
               f"selection={sel.describe() if sel else 'all'}")
     out = {"history": history, "final": history[-1] if history else None,
            "executor": xs, "memory": mem,
-           "consumed": consumed.tolist(), "contribution_balance": bal}
+           "consumed": consumed.tolist(), "contribution_balance": bal,
+           "registry": executor.metrics.snapshot()}
+    if metrics_every:
+        print(executor.metrics.dump_line(prefix="[final]"))
+    if getattr(args, "metrics_out", None):
+        executor.metrics.write_jsonl(args.metrics_out,
+                                     extra={"mode": "pod",
+                                            "rounds": args.rounds})
     if injector is not None:
         fr = injector.report()
         print(f"faults: injected={fr['injected']}  "
@@ -537,7 +552,9 @@ def run_sim(args) -> dict:
                                  seed=args.seed, fleet=fleet,
                                  selection=getattr(args, "selection", None),
                                  hooks=learner, control=control,
-                                 profiles=profiles, faults=faults_sched)
+                                 profiles=profiles, faults=faults_sched,
+                                 metrics_every=float(
+                                     getattr(args, "metrics_every", 0) or 0))
     xte, yte = data.x[:512], data.y[:512]
     acc = learner.eval_accuracy(xte, yte)
     # the measured per-device profiles drive a straggler-aware plan: slow
@@ -559,6 +576,12 @@ def run_sim(args) -> dict:
     print(f"contribution balance: consumed={metrics.dev_consumed.tolist()}  "
           f"gini={bal['gini']:.3f}  cv={bal['cv']:.3f}  "
           f"participants={bal['participants']}/{args.devices}")
+    steady = metrics.steady_summary()
+    if steady:
+        print(f"steady state (post-warmup {steady['warmup_s']:.1f}s): "
+              f"srv idle {steady['srv_idle_frac_steady']:.1%}  dev idle "
+              f"{steady['dev_idle_frac_steady']:.1%}  throughput "
+              f"{steady['throughput_steady']:.0f} samples/s")
     if metrics.registry is not None:
         absences = sum(i.absences
                        for i in metrics.registry.devices.values())
@@ -566,6 +589,7 @@ def run_sim(args) -> dict:
             else "identity"     # selection-only runs get an identity trace
         print(f"fleet: trace={kind}  roster events={absences}  active now "
               f"{len(metrics.registry.active_ids)}/{args.devices}")
+    reg = metrics.to_registry()
     out = {"accuracy": acc, "srv_idle": metrics.srv_idle_frac,
            "dev_idle": metrics.dev_idle_frac,
            "throughput": metrics.throughput,
@@ -574,7 +598,14 @@ def run_sim(args) -> dict:
            "reads_per_round": int(reads.sum()),
            "memory": mem,
            "consumed": metrics.dev_consumed.tolist(),
-           "contribution_balance": bal}
+           "contribution_balance": bal,
+           "steady": steady, "registry": reg.snapshot()}
+    if getattr(args, "metrics_every", 0):
+        print(reg.dump_line(prefix="[final]"))
+    if getattr(args, "metrics_out", None):
+        reg.write_jsonl(args.metrics_out,
+                        extra={"mode": "sim", "duration": args.duration,
+                               "devices": args.devices})
     if metrics.faults is not None:
         fr = metrics.faults
         print(f"faults: injected={fr['injected']}  "
@@ -669,6 +700,22 @@ def main() -> None:
                         "are checked online against the invariant "
                         "catalogue and any violation aborts the run with "
                         "the offending event window")
+    p.add_argument("--trace", default=None, metavar="PATH",
+                   help="record a span trace of the run and export Chrome "
+                        "trace-event JSON to PATH (open in Perfetto or "
+                        "chrome://tracing).  Pod mode traces the host loop "
+                        "on the wall clock; sim mode traces per-device/"
+                        "server/network lanes in simulated time.  Off = "
+                        "zero-instrumentation run (bit-identical)")
+    p.add_argument("--metrics-every", type=float, default=0,
+                   dest="metrics_every", metavar="N",
+                   help="periodically dump the unified metrics registry: "
+                        "every N rounds (pod) or every N simulated "
+                        "seconds (sim); 0 = final summary only")
+    p.add_argument("--metrics-out", default=None, dest="metrics_out",
+                   metavar="PATH",
+                   help="append the final metrics-registry snapshot to "
+                        "PATH as one JSON line")
     p.add_argument("--ckpt-dir", default=None)
     p.add_argument("--ckpt-every", type=int, default=5)
     p.add_argument("--ckpt-flush", action="store_true", dest="ckpt_flush",
@@ -683,15 +730,29 @@ def main() -> None:
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args()
     run = run_pod if args.mode == "pod" else run_sim
+
+    def _run_traced():
+        if not args.trace:
+            run(args)
+            return
+        from repro.obs.trace import Tracer, traced
+        tracer = Tracer(domain="wall" if args.mode == "pod" else "sim")
+        with traced(tracer):
+            run(args)
+        tracer.export_chrome(args.trace)
+        print(f"trace: {len(tracer.spans)} spans on "
+              f"{len(tracer.lanes())} lanes -> {args.trace}")
+
+    # the sanitizer and tracer seams are independent and compose
     if args.sanitize:
         from repro.analysis.sanitize import sanitized
         with sanitized() as san:
-            run(args)
+            _run_traced()
         rep = san.report()
         print(f"sanitizer: {rep['events']} events checked, "
               f"{rep['n_violations']} violations")
     else:
-        run(args)
+        _run_traced()
 
 
 if __name__ == "__main__":

@@ -21,6 +21,9 @@ from __future__ import annotations
 import numpy as np
 
 from repro.analysis import sanitize as _san
+from repro.obs import trace as _tr
+from repro.obs.clock import now as _now
+from repro.obs.metrics import MetricsRegistry
 
 
 def _quant_leaf(x: np.ndarray) -> dict:
@@ -80,22 +83,61 @@ class ActivationStore:
     dequantizes on the way back to the mesh.
     """
 
-    def __init__(self, pool_cap: int, *, quant: bool = False):
+    def __init__(self, pool_cap: int, *, quant: bool = False,
+                 metrics=None):
         if pool_cap < 0:
             raise ValueError(f"pool_cap must be >= 0, got {pool_cap}")
         self.pool_cap = pool_cap
         self.quant = quant
         self._pool: dict[int, dict] = {}   # key -> {"payload", "quant",
                                            #         "dtypes", "staged"?}
-        self.n_spills = 0
-        self.n_fills = 0
-        self.pool_bytes = 0
-        self.peak_pool_bytes = 0
-        self.peak_entries = 0
-        self.n_prefetched = 0
-        self.prefetch_hits = 0
-        self.staged_bytes = 0
-        self.peak_staged_bytes = 0
+        # registry-backed accounting (the legacy counter names below are
+        # read-only properties over these instruments)
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._c_spills = self.metrics.counter("store.spills")
+        self._c_fills = self.metrics.counter("store.fills")
+        self._g_pool_bytes = self.metrics.gauge("store.pool_bytes")
+        self._g_entries = self.metrics.gauge("store.entries")
+        self._c_prefetched = self.metrics.counter("store.prefetched")
+        self._c_prefetch_hits = self.metrics.counter("store.prefetch_hits")
+        self._g_staged_bytes = self.metrics.gauge("store.staged_bytes")
+
+    # legacy counter names, read-only over the registry instruments
+    @property
+    def n_spills(self) -> int:
+        return int(self._c_spills.value)
+
+    @property
+    def n_fills(self) -> int:
+        return int(self._c_fills.value)
+
+    @property
+    def pool_bytes(self) -> int:
+        return int(self._g_pool_bytes.value)
+
+    @property
+    def peak_pool_bytes(self) -> int:
+        return int(self._g_pool_bytes.peak)
+
+    @property
+    def peak_entries(self) -> int:
+        return int(self._g_entries.peak)
+
+    @property
+    def n_prefetched(self) -> int:
+        return int(self._c_prefetched.value)
+
+    @property
+    def prefetch_hits(self) -> int:
+        return int(self._c_prefetch_hits.value)
+
+    @property
+    def staged_bytes(self) -> int:
+        return int(self._g_staged_bytes.value)
+
+    @property
+    def peak_staged_bytes(self) -> int:
+        return int(self._g_staged_bytes.peak)
 
     def __len__(self) -> int:
         return len(self._pool)
@@ -124,28 +166,34 @@ class ActivationStore:
         dtypes = {k: np.asarray(v).dtype for k, v in payload.items()}
         self._pool[key] = {"payload": stored, "quant": self.quant,
                            "dtypes": dtypes}
-        self.n_spills += 1
-        self.pool_bytes += _nbytes(stored)
-        self.peak_pool_bytes = max(self.peak_pool_bytes, self.pool_bytes)
-        self.peak_entries = max(self.peak_entries, len(self._pool))
+        self._c_spills.inc()
+        self._g_pool_bytes.add(_nbytes(stored))
+        self._g_entries.set(len(self._pool))
         if _san.TRACING:
             _san.emit("store.spill", store=self, key=key,
                       entries=len(self._pool))
+        if _tr.TRACING:
+            _tr.emit_instant("host/memory", "spill", _now(), key=key,
+                             entries=len(self._pool))
 
     def fill(self, key: int) -> dict:
         """Pop one entry, dequantized, ready to scatter back on-mesh.
         A prefetch-staged entry returns its staged decode (bit-identical
         to decoding now: ``_decode`` is pure in the stored payload)."""
         e = self._pool.pop(int(key))
-        self.n_fills += 1
-        self.pool_bytes -= _nbytes(e["payload"])
+        self._c_fills.inc()
+        self._g_pool_bytes.add(-_nbytes(e["payload"]))
+        self._g_entries.set(len(self._pool))
         staged = e.get("staged")
         if staged is not None:
-            self.prefetch_hits += 1
-            self.staged_bytes -= _nbytes(staged)
+            self._c_prefetch_hits.inc()
+            self._g_staged_bytes.add(-_nbytes(staged))
         if _san.TRACING:
             _san.emit("store.fill", store=self, key=int(key),
                       entries=len(self._pool))
+        if _tr.TRACING:
+            _tr.emit_instant("host/memory", "fill", _now(), key=int(key),
+                             entries=len(self._pool))
         return staged if staged is not None \
             else _decode(e["payload"], e["dtypes"])
 
@@ -161,10 +209,8 @@ class ActivationStore:
                 e.get("staged") is not None:
             return
         e["staged"] = _decode(e["payload"], e["dtypes"])
-        self.n_prefetched += 1
-        self.staged_bytes += _nbytes(e["staged"])
-        self.peak_staged_bytes = max(self.peak_staged_bytes,
-                                     self.staged_bytes)
+        self._c_prefetched.inc()
+        self._g_staged_bytes.add(_nbytes(e["staged"]))
 
     # ------------------------------------------------------------------
     # checkpoint riding (RetentionStore protocol)
@@ -187,7 +233,8 @@ class ActivationStore:
         self._pool = {int(k): {"payload": None, "quant": bool(e["quant"]),
                                "dtypes": None}
                       for k, e in entries.items()}
-        self.pool_bytes = 0
+        self._g_pool_bytes.set(0)
+        self._g_entries.set(len(self._pool))
 
     def arrays(self) -> dict:
         """Stored (possibly quantized) payloads keyed by pool key — the
@@ -207,9 +254,8 @@ class ActivationStore:
             e["payload"] = {name: dict(v) if _is_quant_leaf(v) else
                             np.asarray(v) for name, v in payload.items()}
             e["dtypes"] = dict(dtypes) if dtypes else None
-            self.pool_bytes += _nbytes(e["payload"])
-        self.peak_pool_bytes = max(self.peak_pool_bytes, self.pool_bytes)
-        self.peak_entries = max(self.peak_entries, len(self._pool))
+            self._g_pool_bytes.add(_nbytes(e["payload"]))
+        self._g_entries.set(len(self._pool))
 
     def like_tree(self, slot_like: dict) -> dict:
         """Restore templates for ``checkpoint.store.restore_extras``:

@@ -20,12 +20,12 @@ from __future__ import annotations
 
 import math
 import sys
-import time
 from dataclasses import dataclass, field
 
 import numpy as np
 
 from repro.checkpoint import store
+from repro.obs.clock import now as _now
 
 
 @dataclass
@@ -60,10 +60,10 @@ class CheckpointPolicy:
     every_seconds: float = 600.0
     retain: int = 3
     _last_step: int = 0
-    _last_time: float = field(default_factory=time.monotonic)
+    _last_time: float = field(default_factory=_now)
 
     def should_save(self, step: int) -> bool:
-        now = time.monotonic()
+        now = _now()
         due = (step - self._last_step >= self.every_steps or
                now - self._last_time >= self.every_seconds)
         return due
@@ -74,13 +74,13 @@ class CheckpointPolicy:
         not from the dataclass defaults (``_last_step=0`` would otherwise
         make a resume at step 5000 save again immediately)."""
         self._last_step = int(step)
-        self._last_time = time.monotonic()
+        self._last_time = _now()
 
     def save(self, step: int, tree, metadata=None, extras=None):
         path = store.save(self.directory, step, tree, metadata, self.retain,
                           extras=extras)
         self._last_step = step
-        self._last_time = time.monotonic()
+        self._last_time = _now()
         return path
 
 
